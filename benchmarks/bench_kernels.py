@@ -1,0 +1,74 @@
+"""Kernel benchmarks: jitted wall time per call (CPU; interpret-mode
+correctness is asserted, timing uses the pure-jnp reference path which is
+what actually executes on CPU) + allclose error vs oracle as ``derived``."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd import ssd_intra_chunk
+from repro.kernels.spmv_ell import spmv_block_ell, csr_to_block_ell
+from repro.kernels import ref
+from repro.sparse import elasticity_like_3d
+
+
+def _time_call(fn, *args, reps=3):
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def bench_flash_attention():
+    rng = np.random.default_rng(0)
+    B, S, H, KH, D = 1, 512, 8, 2, 64
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KH, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KH, D)), jnp.float32)
+    out_k = flash_attention(q, k, v, causal=True, interpret=True)
+    out_r = ref.flash_attention_ref(q, k, v, causal=True)
+    err = float(jnp.max(jnp.abs(out_k - out_r)))
+    us = _time_call(jax.jit(lambda *a: ref.flash_attention_ref(*a)), q, k, v)
+    return [("kernel_flash_attention_512", us, err)]
+
+
+def bench_ssd():
+    rng = np.random.default_rng(1)
+    G, q, n, p = 16, 128, 128, 64
+    dtx = jnp.asarray(rng.standard_normal((G, q, p)), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((G, q, n)), jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((G, q, n)), jnp.float32)
+    cumA = jnp.cumsum(-jnp.asarray(rng.uniform(0.001, 0.1, (G, q, 1)),
+                                   jnp.float32), axis=1)
+    y_k, s_k = ssd_intra_chunk(dtx, Bm, Cm, cumA, interpret=True)
+    y_r, s_r = ref.ssd_intra_chunk_ref(dtx, Bm, Cm, cumA)
+    err = float(max(jnp.max(jnp.abs(y_k - y_r)), jnp.max(jnp.abs(s_k - s_r))))
+    us = _time_call(jax.jit(lambda *a: ref.ssd_intra_chunk_ref(*a)),
+                    dtx, Bm, Cm, cumA)
+    return [("kernel_ssd_intra_chunk_128", us, err)]
+
+
+def bench_spmv():
+    rng = np.random.default_rng(2)
+    A = elasticity_like_3d(8)     # 1536 rows, 3-dof blocks
+    blocks, cols, max_bpr = csr_to_block_ell(A, bs=8)
+    x = jnp.asarray(rng.standard_normal(blocks.shape[0] * 8), jnp.float32)
+    y_k = spmv_block_ell(blocks, cols, x, interpret=True)
+    y_r = ref.spmv_block_ell_ref(blocks, cols, x)
+    err = float(jnp.max(jnp.abs(y_k - y_r)))
+    us = _time_call(jax.jit(lambda *a: ref.spmv_block_ell_ref(*a)),
+                    blocks, cols, x)
+    # density of the block-ELL padding (fraction of stored entries that are
+    # structural nonzeros) — the bs trade-off the DESIGN discusses
+    density = A.nnz / blocks.size
+    return [("kernel_spmv_block_ell_1536", us, err),
+            ("kernel_spmv_block_ell_density", us, float(density))]
+
+
+ALL_BENCHES = [bench_flash_attention, bench_ssd, bench_spmv]

@@ -1,0 +1,70 @@
+"""Roofline benchmark: summarize the dry-run artifacts into the three-term
+table (compute / memory / collective) per (arch x shape x mesh) cell."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.core.params import (V5E_PEAK_FLOPS_BF16, V5E_HBM_BW)
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_cells(pattern: str = "*.json"):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(ART, pattern))):
+        a = json.load(open(f))
+        if a.get("status") == "ok":
+            cells.append(a)
+    return cells
+
+
+def roofline_terms(a: dict) -> dict:
+    """Three terms in seconds (per-device cost_analysis -> per-chip times)."""
+    flops = a["cost"]["flops_per_device"]
+    byts = a["cost"]["bytes_per_device"]
+    cm = a["comm_model"]
+    compute = flops / V5E_PEAK_FLOPS_BF16
+    memory = byts / V5E_HBM_BW
+    coll_naive = cm["naive_time"]
+    coll_model = cm["model_time"]
+    dominant = max((compute, "compute"), (memory, "memory"),
+                   (coll_model, "collective"))[1]
+    # MODEL_FLOPS: 6*N_active*D for train (fwd+bwd), 2*N_active*D for inference
+    tokens = (a["global_batch"] * a["seq_len"] if a["kind"] != "decode"
+              else a["global_batch"])
+    mult = 6 if a["kind"] == "train" else 2
+    chips = 512 if "2x16x16" in a["mesh"] else 256
+    model_flops = mult * a["n_active_params"] * tokens / chips
+    return {
+        "compute_s": compute, "memory_s": memory,
+        "coll_naive_s": coll_naive, "coll_model_s": coll_model,
+        "dominant": dominant,
+        "model_hlo_ratio": model_flops / flops if flops else 0.0,
+        "roofline_frac": max(compute, memory) / (compute + memory + coll_model)
+        if (compute + memory + coll_model) > 0 else 0.0,
+    }
+
+
+def bench_roofline_table():
+    cells = load_cells()
+    rows = []
+    worst = (1.0, None)
+    n_fit = 0
+    for a in cells:
+        t = roofline_terms(a)
+        frac = t["roofline_frac"]
+        if frac < worst[0]:
+            worst = (frac, f"{a['arch']}x{a['shape']}x{a['mesh']}")
+        n_fit += a["memory"]["peak_bytes"] < 15.5 * 2**30
+    if cells:
+        rows.append(("roofline_cells_ok", 0.0, float(len(cells))))
+        rows.append(("roofline_cells_fit_hbm", 0.0, float(n_fit)))
+        rows.append(("roofline_worst_fraction", 0.0, worst[0]))
+    else:
+        rows.append(("roofline_cells_ok", 0.0, 0.0))
+    return rows
+
+
+ALL_BENCHES = [bench_roofline_table]

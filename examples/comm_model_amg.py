@@ -1,0 +1,55 @@
+"""The paper's workflow, end to end: build an AMG hierarchy, extract the
+per-level communication patterns, price them with the model ladder, and
+compare against the mechanistic simulator ("measured").
+
+    PYTHONPATH=src python examples/comm_model_amg.py
+"""
+import numpy as np
+
+from repro.core import model_ladder, MODEL_LEVELS
+from repro.core.report import format_table
+from repro.net import blue_waters_machine, simulate_phase
+from repro.sparse import (elasticity_like_3d, build_hierarchy, RowPartition,
+                          spmv_comm_pattern)
+
+
+def main():
+    A = elasticity_like_3d(12)
+    levels = build_hierarchy(A)
+    machine = blue_waters_machine((4, 2, 2))
+    print(f"elasticity-like operator: {A.shape[0]} dof, {A.nnz} nnz, "
+          f"{len(levels)} AMG levels\n")
+
+    rows = []
+    rng = np.random.default_rng(0)
+    for li, lvl in enumerate(levels):
+        n_procs = min(512, max(lvl.A.n_rows // 2, 2))
+        part = RowPartition.balanced(lvl.A.n_rows, n_procs)
+        cp = spmv_comm_pattern(lvl.A, part)
+        if cp.n_msgs == 0:
+            continue
+        arrival = {int(p): rng.permutation(np.nonzero(cp.dst == p)[0])
+                   for p in np.unique(cp.dst)}
+        meas = simulate_phase(machine, cp.src, cp.dst, cp.size,
+                              arrival_order=arrival).time
+        lad = model_ladder(machine.params, cp.src, cp.dst, cp.size,
+                           machine.locality(cp.src, cp.dst),
+                           node_of=machine.node_of,
+                           n_torus_nodes=machine.torus.size,
+                           torus_ndim=3,
+                           procs_per_torus_node=machine.procs_per_torus_node,
+                           n_procs=cp.n_procs)
+        row = {"level": li, "rows": lvl.A.n_rows,
+               "msgs/proc": cp.max_msgs_per_proc(), "measured": meas}
+        for lvlname in MODEL_LEVELS:
+            row[lvlname] = lad[lvlname].total
+        rows.append(row)
+    print(format_table(rows, title="SpMV per AMG level: measured vs model "
+                                   "ladder (seconds)"))
+    print("\nReading: 'node_aware' (transport only) under-predicts the "
+          "message-heavy levels;\n'queue' adds the paper's gamma*n^2 term; "
+          "'contention' brackets from above (Sec. 5).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Sharded checkpointing with atomic commits, async writes, content hashes,
+resume-from-latest and elastic (re-mesh) restore."""
+from .checkpoint import (save_checkpoint, load_checkpoint, latest_step,
+                         CheckpointManager)
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step",
+           "CheckpointManager"]

@@ -1,0 +1,36 @@
+"""The paper's contribution: node-aware performance models for irregular
+point-to-point communication (Bienz/Gropp/Olson, EuroMPI 2018), adapted to
+TPU pods and wired into the framework's roofline and autotuning.
+
+Layout:
+  params     — locality x protocol parameter tables (Blue Waters Table 1; TPU v5e)
+  models     — postal / max-rate / node-aware / +queue / +contention cost ladder
+  topology   — d-dim torus math (hops, routes, the cube-partition estimate)
+  fitting    — parameter recovery from ping-pong measurements
+  hlo        — compiled-HLO collective extraction (incl. iota replica groups)
+  decompose  — collective -> p2p messages on the physical pod; model pricing
+  report     — accuracy tables
+"""
+from .params import (CommParams, blue_waters, tpu_v5e, SHORT, EAGER, REND,
+                     PROTOCOL_NAMES)
+from .models import (CostBreakdown, message_time, queue_time, contention_time,
+                     phase_cost, model_ladder, MODEL_LEVELS)
+from .topology import TorusTopology, average_hops, contention_ell, cube_side
+from .fitting import (fit_alpha_beta, fit_node_aware_table, fit_RN, fit_gamma,
+                      fit_delta)
+from .hlo import CollectiveOp, parse_collectives, collective_summary, shape_bytes
+from .decompose import (PodGeometry, MessageSet, decompose_collective,
+                        price_collective, price_step, StepCommModel,
+                        CollectiveCost)
+
+__all__ = [
+    "CommParams", "blue_waters", "tpu_v5e", "SHORT", "EAGER", "REND",
+    "PROTOCOL_NAMES",
+    "CostBreakdown", "message_time", "queue_time", "contention_time",
+    "phase_cost", "model_ladder", "MODEL_LEVELS",
+    "TorusTopology", "average_hops", "contention_ell", "cube_side",
+    "fit_alpha_beta", "fit_node_aware_table", "fit_RN", "fit_gamma", "fit_delta",
+    "CollectiveOp", "parse_collectives", "collective_summary", "shape_bytes",
+    "PodGeometry", "MessageSet", "decompose_collective", "price_collective",
+    "price_step", "StepCommModel", "CollectiveCost",
+]

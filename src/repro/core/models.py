@@ -1,0 +1,167 @@
+"""Communication performance models (postal -> max-rate -> node-aware -> +queue/+contention).
+
+All functions are vectorized over *message arrays*: ``size[i]`` bytes from
+process ``src[i]`` to ``dst[i]`` with locality class ``loc[i]``.  Aggregation
+follows the paper: per-process transport sums (max over processes), a single
+worst-process queue term ``gamma * n^2`` and a single contention term
+``delta * ell`` per phase.
+
+Model hierarchy (each row adds one of the paper's contributions):
+
+==============  =====================================================
+``postal``      T = alpha + s / Rb                      (single class)
+``maxrate``     T = alpha + ppn*s / min(RN, ppn*Rb)     (single class)
+``node_aware``  per-locality (alpha, Rb, RN)            (Section 3)
+``+queue``      + gamma * n_recv^2                      (Section 4.1)
+``+contention`` + delta * ell                           (Section 4.2)
+==============  =====================================================
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .params import CommParams
+from .topology import contention_ell
+
+MODEL_LEVELS = ("postal", "maxrate", "node_aware", "queue", "contention")
+
+
+@dataclasses.dataclass(frozen=True)
+class CostBreakdown:
+    """Seconds per phase, split by source (paper Figs. 10-11 stacked bars)."""
+
+    transport: float       # max-rate (or postal) term, max over processes
+    queue: float           # gamma * n^2, worst process
+    contention: float      # delta * ell
+    total: float
+
+    def as_dict(self) -> dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+# -- per-message time ------------------------------------------------------
+
+def message_time(params: CommParams, size, loc, ppn=1, node_aware: bool = True,
+                 use_maxrate: bool = True) -> np.ndarray:
+    """Vectorized single-message time.
+
+    ``ppn`` is the number of *actively communicating* processes on the sending
+    node (scalar or per-message array).  With ``node_aware=False`` every
+    message is priced with the network-class parameters (the paper's Fig.-2
+    baseline).  With ``use_maxrate=False`` the injection cap is ignored
+    (pure postal).
+    """
+    size = np.asarray(size, dtype=np.float64)
+    loc = np.asarray(loc, dtype=np.int64)
+    if not node_aware:
+        loc = np.full_like(loc, params.network_locality)
+    proto = params.protocol_of(size)
+    alpha = params.alpha[loc, proto]
+    Rb = params.Rb[loc, proto]
+    if use_maxrate:
+        ppn = np.asarray(ppn, dtype=np.float64)
+        RN = params.RN[loc, proto]
+        # only network-class messages contend for injection bandwidth
+        is_net = loc >= params.network_locality
+        eff_ppn = np.where(is_net, np.maximum(ppn, 1.0), 1.0)
+        rate = np.minimum(RN, eff_ppn * Rb)
+        return alpha + eff_ppn * size / rate
+    return alpha + size / Rb
+
+
+def queue_time(params: CommParams, n_messages) -> np.ndarray:
+    """Paper Eq. (3): T_q = gamma * n^2 (upper bound, adverse receive order)."""
+    n = np.asarray(n_messages, dtype=np.float64)
+    return params.gamma * n * n
+
+
+def contention_time(params: CommParams, n_torus_nodes: int, torus_ndim: int,
+                    avg_net_bytes_per_proc: float, procs_per_torus_node: int) -> float:
+    """Paper Eqs. (5)-(7): T_c = delta * ell, cube-partition estimate."""
+    ell = contention_ell(n_torus_nodes, torus_ndim, avg_net_bytes_per_proc,
+                         procs_per_torus_node)
+    return float(params.delta * ell)
+
+
+# -- phase-level aggregation ------------------------------------------------
+
+def _active_ppn(src, loc, node_of, network_locality: int) -> np.ndarray:
+    """Per-message count of actively-communicating processes on the sender's node."""
+    src = np.asarray(src)
+    loc = np.asarray(loc)
+    nodes = np.asarray([node_of(int(p)) for p in src], dtype=np.int64) if callable(node_of) \
+        else np.asarray(node_of)[src]
+    is_net = loc >= network_locality
+    active: dict[int, set] = {}
+    for p, nd, n in zip(src, nodes, is_net):
+        if n:
+            active.setdefault(int(nd), set()).add(int(p))
+    counts = {nd: len(ps) for nd, ps in active.items()}
+    return np.asarray([counts.get(int(nd), 1) if n else 1
+                       for nd, n in zip(nodes, is_net)], dtype=np.float64)
+
+
+def phase_cost(params: CommParams, src, dst, size, loc, *,
+               node_of=None,
+               n_torus_nodes: int | None = None,
+               torus_ndim: int = 3,
+               procs_per_torus_node: int = 1,
+               n_procs: int | None = None,
+               level: str = "contention") -> CostBreakdown:
+    """Model the cost of one communication phase (e.g. one SpMV halo exchange).
+
+    Parameters
+    ----------
+    src, dst, size, loc : per-message arrays.
+    node_of : process -> node map (callable or array); required for max-rate.
+    n_torus_nodes, torus_ndim, procs_per_torus_node : contention geometry.
+    level : which rung of the model ladder to evaluate (``MODEL_LEVELS``).
+    """
+    if level not in MODEL_LEVELS:
+        raise ValueError(f"unknown model level {level!r}")
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    size = np.asarray(size, dtype=np.float64)
+    loc = np.asarray(loc, dtype=np.int64)
+    node_aware = MODEL_LEVELS.index(level) >= MODEL_LEVELS.index("node_aware")
+    use_maxrate = MODEL_LEVELS.index(level) >= MODEL_LEVELS.index("maxrate")
+
+    if src.size == 0:
+        return CostBreakdown(0.0, 0.0, 0.0, 0.0)
+
+    if use_maxrate and node_of is not None:
+        ppn = _active_ppn(src, loc, node_of, params.network_locality)
+    else:
+        ppn = np.ones_like(size)
+    t_msg = message_time(params, size, loc, ppn=ppn, node_aware=node_aware,
+                         use_maxrate=use_maxrate)
+
+    # transport: worst process over (send-side sums)
+    n_procs = int(n_procs if n_procs is not None else max(src.max(), dst.max()) + 1)
+    per_proc = np.zeros(n_procs)
+    np.add.at(per_proc, src, t_msg)
+    transport = float(per_proc.max())
+
+    queue = 0.0
+    if MODEL_LEVELS.index(level) >= MODEL_LEVELS.index("queue"):
+        n_recv = np.bincount(dst, minlength=n_procs)
+        queue = float(queue_time(params, n_recv.max()))
+
+    cont = 0.0
+    if level == "contention" and n_torus_nodes is not None and n_torus_nodes > 1:
+        is_net = loc >= params.network_locality
+        net_bytes = float(size[is_net].sum())
+        if net_bytes > 0.0:
+            b = net_bytes / n_procs   # avg bytes sent per process (paper's b)
+            cont = contention_time(params, n_torus_nodes, torus_ndim, b,
+                                   procs_per_torus_node)
+
+    return CostBreakdown(transport, queue, cont, transport + queue + cont)
+
+
+def model_ladder(params: CommParams, src, dst, size, loc, **kw) -> dict[str, CostBreakdown]:
+    """Evaluate every model level on the same phase (for accuracy tables)."""
+    return {lvl: phase_cost(params, src, dst, size, loc, level=lvl, **kw)
+            for lvl in MODEL_LEVELS}

@@ -1,0 +1,160 @@
+"""Parameter tables for the node-aware max-rate communication model.
+
+The paper (Bienz/Gropp/Olson, EuroMPI'18) splits the classic postal/max-rate
+parameters along two axes:
+
+* **protocol** — short / eager / rendezvous, selected by message size;
+* **locality** — intra-socket / intra-node(cross-socket) / inter-node.
+
+and adds two scalar penalties:
+
+* ``gamma`` — receive-queue search cost per queue element (T_q = gamma * n^2)
+* ``delta`` — per-byte network-link contention penalty (T_c = delta * ell)
+
+``CommParams`` stores these as dense ``[n_locality, n_protocol]`` tables so the
+model functions in :mod:`repro.core.models` can vectorize over messages.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+INF = float("inf")
+
+# Protocol indices (message-size regimes).
+SHORT, EAGER, REND = 0, 1, 2
+PROTOCOL_NAMES = ("short", "eager", "rend")
+
+# Default size thresholds (bytes).  Blue Waters' CrayMPI switches
+# eager->rendezvous around 8 KiB; "short" rides in the envelope.
+DEFAULT_SHORT_MAX = 512
+DEFAULT_EAGER_MAX = 8192
+
+
+@dataclasses.dataclass(frozen=True)
+class CommParams:
+    """Locality- and protocol-split postal/max-rate parameters.
+
+    Attributes
+    ----------
+    locality_names: names of locality classes, ordered "closest" first.
+    alpha:  [L, P] per-message latency (seconds).
+    Rb:     [L, P] per-process transport rate (bytes/second); beta = 1/Rb.
+    RN:     [L, P] node injection-bandwidth cap (bytes/second); ``inf`` where
+            injection is not a bottleneck (e.g. intra-node traffic).
+    gamma:  queue-search cost per element (seconds).
+    delta:  per-byte contention penalty on the hottest link (seconds/byte).
+    short_max / eager_max: protocol size thresholds in bytes.
+    network_locality: index of the first locality class that traverses the
+            network (used by contention/injection logic).
+    """
+
+    locality_names: tuple[str, ...]
+    alpha: np.ndarray
+    Rb: np.ndarray
+    RN: np.ndarray
+    gamma: float
+    delta: float
+    short_max: int = DEFAULT_SHORT_MAX
+    eager_max: int = DEFAULT_EAGER_MAX
+    network_locality: int = 2
+
+    @property
+    def n_locality(self) -> int:
+        return len(self.locality_names)
+
+    def protocol_of(self, size) -> np.ndarray:
+        """Vectorized protocol classification by message size (bytes)."""
+        size = np.asarray(size)
+        return np.where(size <= self.short_max, SHORT,
+                        np.where(size <= self.eager_max, EAGER, REND)).astype(np.int32)
+
+    def replace(self, **kw) -> "CommParams":
+        return dataclasses.replace(self, **kw)
+
+
+def _tbl(rows: Sequence[Sequence[float]]) -> np.ndarray:
+    """rows indexed [protocol][locality] -> array [locality, protocol]."""
+    return np.asarray(rows, dtype=np.float64).T
+
+
+def blue_waters() -> CommParams:
+    """Table 1 of the paper: node-aware max-rate parameters on Blue Waters.
+
+    Localities: 0=intra-socket, 1=intra-node (cross socket), 2=inter-node.
+    """
+    alpha = _tbl([
+        # intra-socket, intra-node, inter-node
+        [4.4e-07, 8.3e-07, 2.3e-06],   # short
+        [5.3e-07, 1.2e-06, 7.0e-06],   # eager
+        [1.7e-06, 2.5e-06, 3.0e-06],   # rendezvous
+    ])
+    Rb = _tbl([
+        [2.2e09, 4.8e08, 1.3e09],
+        [3.2e09, 9.6e08, 7.5e08],
+        [6.2e09, 6.2e09, 2.9e09],
+    ])
+    RN = _tbl([
+        [INF, INF, INF],
+        [INF, INF, INF],
+        [INF, INF, 6.6e09],            # injection limit only for rendezvous
+    ])
+    return CommParams(
+        locality_names=("intra_socket", "intra_node", "inter_node"),
+        alpha=alpha, Rb=Rb, RN=RN,
+        gamma=8.4e-09,                  # Eq. (4)
+        delta=1.0e-10,                  # Eq. (6)
+        network_locality=2,
+    )
+
+
+def tpu_v5e() -> CommParams:
+    """TPU v5e adaptation of the node-aware parameter table.
+
+    Localities: 0=intra-host (4 chips/tray), 1=intra-pod (ICI torus),
+    2=inter-pod (DCN).  These are *design parameters*: there is no hardware in
+    this container to calibrate against, so values are set from public specs
+    (ICI ~50 GB/s/link, 4 links/chip; DCN ~25 GB/s/host) with latency floors
+    typical of XLA transfer launch.  The model only needs internally-consistent
+    parameters to rank layouts; absolute accuracy is calibrated on-hardware via
+    :mod:`repro.core.fitting` exactly as the paper does with ping-pongs.
+    """
+    alpha = _tbl([
+        # intra-host, intra-pod(ICI), inter-pod(DCN)
+        [8.0e-07, 1.0e-06, 1.0e-05],   # small
+        [9.0e-07, 1.5e-06, 2.0e-05],   # medium
+        [1.2e-06, 2.0e-06, 5.0e-05],   # large
+    ])
+    Rb = _tbl([
+        [2.0e10, 1.0e10, 1.0e09],
+        [4.0e10, 3.0e10, 3.0e09],
+        [5.0e10, 4.5e10, 6.25e09],
+    ])
+    # Injection cap: 4 ICI links/chip x ~45 GB/s effective; DCN per-chip share
+    # of a 25 GB/s host NIC.
+    RN = _tbl([
+        [INF, 1.8e11, 2.5e10],
+        [INF, 1.8e11, 2.5e10],
+        [INF, 1.8e11, 2.5e10],
+    ])
+    return CommParams(
+        locality_names=("intra_host", "intra_pod", "inter_pod"),
+        alpha=alpha, Rb=Rb, RN=RN,
+        gamma=1.0e-08,                  # per-outstanding-DMA match/dispatch cost
+        delta=5.0e-11,                  # ICI link contention penalty
+        short_max=DEFAULT_SHORT_MAX,
+        eager_max=DEFAULT_EAGER_MAX,
+        network_locality=1,             # ICI already traverses torus links
+    )
+
+
+# Hardware roofline constants for TPU v5e (per chip).
+V5E_PEAK_FLOPS_BF16 = 197e12     # FLOP/s
+V5E_HBM_BW = 819e9               # bytes/s
+V5E_ICI_LINK_BW = 50e9           # bytes/s per link
+V5E_ICI_LINKS_PER_CHIP = 4       # 2-D torus: +-x, +-y
+V5E_DCN_BW_PER_HOST = 25e9       # bytes/s
+V5E_CHIPS_PER_HOST = 4
+V5E_HBM_PER_CHIP = 16 * 1024**3  # bytes

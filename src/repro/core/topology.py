@@ -1,0 +1,139 @@
+"""d-dimensional torus topology: coordinates, routes, hop counts, link ids.
+
+The paper's contention model assumes the job occupies a perfect cube of Blue
+Waters' 3-D Gemini torus (Fig. 8) and estimates the bytes crossing the hottest
+link as ``ell = 2 * h^d * b * ppn`` where ``h`` is the average hops per byte.
+TPU v5e pods are 2-D ICI tori, so the torus dimension is a parameter here.
+
+Ranks are *torus-node* ranks (Geminis on Blue Waters, chips on TPU); the
+mapping from processes to torus nodes lives in :mod:`repro.net.machine`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TorusTopology:
+    """A torus with extent ``dims[i]`` in dimension ``i`` (row-major ranks)."""
+
+    dims: tuple[int, ...]
+    wrap: bool = True   # tori wrap; a job partition inside a larger torus may not
+
+    @property
+    def ndim(self) -> int:
+        return len(self.dims)
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.dims))
+
+    # -- coordinates ------------------------------------------------------
+    def coords(self, rank) -> np.ndarray:
+        """rank (or array of ranks) -> coords array [..., ndim]."""
+        rank = np.asarray(rank)
+        out = np.empty(rank.shape + (self.ndim,), dtype=np.int64)
+        rem = rank
+        for i in range(self.ndim - 1, -1, -1):
+            out[..., i] = rem % self.dims[i]
+            rem = rem // self.dims[i]
+        return out
+
+    def rank(self, coords) -> np.ndarray:
+        coords = np.asarray(coords)
+        r = np.zeros(coords.shape[:-1], dtype=np.int64)
+        for i in range(self.ndim):
+            r = r * self.dims[i] + coords[..., i]
+        return r
+
+    # -- distances --------------------------------------------------------
+    def _dim_delta(self, a, b, i):
+        """Signed minimal step direction and distance along dim i."""
+        d = (np.asarray(b) - np.asarray(a)) % self.dims[i]
+        if not self.wrap:
+            return np.asarray(b) - np.asarray(a)
+        # choose the shorter way around the ring
+        alt = d - self.dims[i]
+        return np.where(np.abs(alt) < d, alt, d)
+
+    def hops(self, a, b) -> np.ndarray:
+        """Minimal hop count between ranks a and b (arrays ok)."""
+        ca, cb = self.coords(a), self.coords(b)
+        total = np.zeros(np.broadcast_shapes(np.shape(a), np.shape(b)), dtype=np.int64)
+        for i in range(self.ndim):
+            total = total + np.abs(self._dim_delta(ca[..., i], cb[..., i], i))
+        return total
+
+    # -- routing ----------------------------------------------------------
+    def route_links(self, a: int, b: int) -> list[tuple[int, int, int]]:
+        """Dimension-ordered route from rank a to rank b.
+
+        Returns a list of directed-link ids normalized to undirected form:
+        ``(node_rank, dim, +1)`` meaning the link between ``node`` and its
+        ``+1`` neighbor along ``dim``.  Negative-direction hops are normalized
+        to the equivalent link owned by the lower-coordinate node.
+        """
+        ca = self.coords(a).copy()
+        cb = self.coords(b)
+        links: list[tuple[int, int, int]] = []
+        for i in range(self.ndim):
+            delta = int(self._dim_delta(ca[i], cb[i], i))
+            step = 1 if delta > 0 else -1
+            for _ in range(abs(delta)):
+                if step > 0:
+                    links.append((int(self.rank(ca)), i, 1))
+                    ca[i] = (ca[i] + 1) % self.dims[i]
+                else:
+                    ca[i] = (ca[i] - 1) % self.dims[i]
+                    links.append((int(self.rank(ca)), i, 1))
+        return links
+
+    def accumulate_link_bytes(self, srcs, dsts, sizes) -> dict[tuple[int, int, int], float]:
+        """Route every (src, dst, size) message; return per-link byte totals."""
+        acc: dict[tuple[int, int, int], float] = {}
+        for s, d, z in zip(np.asarray(srcs), np.asarray(dsts), np.asarray(sizes)):
+            if s == d:
+                continue
+            for link in self.route_links(int(s), int(d)):
+                acc[link] = acc.get(link, 0.0) + float(z)
+        return acc
+
+
+# -- the paper's cube-partition estimate -----------------------------------
+
+def cube_side(n_units: int, ndim: int) -> int:
+    """Side length of the smallest ndim-cube holding n_units torus nodes."""
+    return max(1, math.ceil(n_units ** (1.0 / ndim) - 1e-9))
+
+
+def average_hops(n_units: int, ndim: int) -> float:
+    """Average hops ``h`` per byte under the perfect-cube assumption.
+
+    For uniform random endpoints on a line of length c (no wraparound inside
+    the job partition), E|i-j| = (c^2-1)/(3c); L1 distance sums over ndim
+    dimensions.  This is the paper's Fig.-8 style estimate generalized to any
+    torus dimension.
+    """
+    c = cube_side(n_units, ndim)
+    if c <= 1:
+        return 0.0
+    per_dim = (c * c - 1.0) / (3.0 * c)
+    return ndim * per_dim
+
+
+def contention_ell(n_units: int, ndim: int, avg_bytes_per_proc: float,
+                   ppn: int) -> float:
+    """The paper's Eq. (7): ell = 2 * h^d * b * ppn.
+
+    ``h^d`` estimates how many torus nodes are within ``h`` hops of a given
+    link (i.e. whose traffic can be funneled through it) and ``2*b*ppn`` is the
+    average bytes leaving each torus node (2 compute nodes per Gemini on Blue
+    Waters; chips-per-host on TPU).  The torus dimension generalizes the
+    paper's cube (d=3) to the v5e 2-D torus.
+    """
+    h = average_hops(n_units, ndim)
+    return 2.0 * (h ** ndim) * avg_bytes_per_proc * ppn

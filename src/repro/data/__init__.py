@@ -1,0 +1,3 @@
+from .pipeline import SyntheticTokens, shard_assignment
+
+__all__ = ["SyntheticTokens", "shard_assignment"]

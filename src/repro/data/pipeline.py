@@ -1,0 +1,90 @@
+"""Deterministic synthetic token pipeline with per-host sharding, prefetch,
+and fault re-dispatch.
+
+Determinism contract: batch(step, shard) is a pure function of
+(seed, step, shard) — so a restarted or re-meshed job replays the exact same
+token stream, and a dead host's shards can be recomputed by any survivor
+(``shard_assignment``).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+import numpy as np
+
+
+def shard_assignment(n_shards: int, alive_hosts: list[int]) -> dict[int, list[int]]:
+    """Round-robin shard ownership over the alive hosts (straggler/failure
+    re-dispatch).  Deterministic: every survivor computes the same map."""
+    alive = sorted(alive_hosts)
+    out: dict[int, list[int]] = {h: [] for h in alive}
+    for s in range(n_shards):
+        out[alive[s % len(alive)]].append(s)
+    return out
+
+
+class SyntheticTokens:
+    """Deterministic LM token batches.
+
+    Yields dicts matching the model's batch contract for the arch family.
+    """
+
+    def __init__(self, vocab_size: int, batch: int, seq_len: int,
+                 n_shards: int = 1, shard: int = 0, seed: int = 0,
+                 prefetch: int = 2, family: str = "dense",
+                 d_model: int = 0, encoder_seq: int = 0):
+        assert batch % n_shards == 0
+        self.vocab = vocab_size
+        self.local_batch = batch // n_shards
+        self.seq = seq_len
+        self.shard = shard
+        self.n_shards = n_shards
+        self.seed = seed
+        self.family = family
+        self.d_model = d_model
+        self.encoder_seq = encoder_seq
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._step = 0
+        self._thread: threading.Thread | None = None
+
+    # -- pure batch function --------------------------------------------------
+    def batch_at(self, step: int, shard: int | None = None) -> dict:
+        shard = self.shard if shard is None else shard
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, shard]))
+        b = {"tokens": rng.integers(
+            1, self.vocab, (self.local_batch, self.seq)).astype(np.int32)}
+        if self.family == "vlm":
+            b = {"embeds": rng.standard_normal(
+                     (self.local_batch, self.seq, self.d_model)
+                 ).astype(np.float32),
+                 "positions": np.broadcast_to(
+                     np.arange(self.seq, dtype=np.int32)[None, :, None],
+                     (self.local_batch, self.seq, 3)).copy(),
+                 "targets": rng.integers(
+                     1, self.vocab,
+                     (self.local_batch, self.seq)).astype(np.int32)}
+        elif self.family == "audio":
+            b["frames"] = rng.standard_normal(
+                (self.local_batch, self.encoder_seq, self.d_model)
+            ).astype(np.float32)
+        return b
+
+    # -- prefetching iterator -------------------------------------------------
+    def _producer(self):
+        step = self._step
+        while True:
+            self._q.put((step, self.batch_at(step)))
+            step += 1
+
+    def __iter__(self):
+        if self._thread is None:
+            self._thread = threading.Thread(target=self._producer, daemon=True)
+            self._thread.start()
+        return self
+
+    def __next__(self):
+        step, batch = self._q.get()
+        self._step = step + 1
+        return batch

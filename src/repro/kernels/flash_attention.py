@@ -1,0 +1,113 @@
+"""Flash attention (block-wise online softmax) as a Pallas TPU kernel.
+
+The train/prefill compute hot-spot.  Grid: (batch, q_heads, nq, nk) with the
+KV-block index innermost; running max / denominator / accumulator live in
+VMEM scratch across the nk dimension and the output tile is finalized on the
+last KV block.  GQA is handled in the K/V BlockSpec index maps (query head h
+reads KV head ``h // rep``) — KV tensors are never materialized per-q-head.
+
+Block shapes are MXU-aligned (multiples of 128 on the matmul dims); the
+f32 scratch working set per program is
+``block_q*(d + block_k + 2)`` floats ~ 128*(128+128+2)*4 B ~ 132 KiB,
+comfortably inside a v5e core's ~16 MiB VMEM alongside the Q/K/V tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, block_q: int, block_k: int,
+                  nk: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # [bq, d]
+    k = k_ref[0, 0].astype(jnp.float32)            # [bk, d]
+    v = v_ref[0, 0].astype(jnp.float32)            # [bk, d]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # [bq, bk]
+    if causal:
+        qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (block_q, block_k), 0)
+        kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (block_q, block_k), 1)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+
+    m_prev = m_scr[...]                             # [bq, 1]
+    l_prev = l_scr[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                          # [bq, bk]
+    l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+    acc = acc_scr[...] * alpha + jax.lax.dot(p, v)  # [bq, d]
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q: [B, S, H, D]; k/v: [B, S, KH, D] -> [B, S, H, D].
+
+    H must be a multiple of KH (GQA); S must be a multiple of the block
+    sizes.  ``interpret=True`` runs the kernel body in Python on CPU (how it
+    is validated in this container); on TPU pass False.
+    """
+    B, S, H, D = q.shape
+    KH = k.shape[2]
+    assert H % KH == 0, (H, KH)
+    rep = H // KH
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    nq, nk = S // block_q, S // block_k
+    scale = 1.0 / (D ** 0.5)
+
+    qt = q.transpose(0, 2, 1, 3)     # [B, H, S, D]
+    kt = k.transpose(0, 2, 1, 3)     # [B, KH, S, D]
+    vt = v.transpose(0, 2, 1, 3)
+
+    grid = (B, H, nq, nk)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          block_q=block_q, block_k=block_k, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, qi, ki, rep=rep: (b, h // rep, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, qi, ki, rep=rep: (b, h // rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

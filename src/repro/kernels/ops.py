@@ -1,0 +1,28 @@
+"""Public jit'd wrappers for the Pallas kernels (shape checks + dispatch).
+
+``interpret=True`` (Python-on-CPU execution of the kernel body) is how the
+kernels are validated in this container; on TPU hardware the same calls run
+compiled with ``interpret=False``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention
+from .ssd import ssd_intra_chunk
+from .spmv_ell import spmv_block_ell, csr_to_block_ell
+
+__all__ = ["flash_attention", "ssd_intra_chunk", "spmv_block_ell",
+           "csr_to_block_ell", "mha_flash"]
+
+
+def mha_flash(q, k, v, causal=True, block_q=128, block_k=128,
+              interpret=False):
+    """Shape-checked flash attention entry point."""
+    assert q.ndim == 4 and k.ndim == 4 and v.ndim == 4
+    assert k.shape == v.shape
+    assert q.shape[0] == k.shape[0] and q.shape[1] == k.shape[1]
+    assert q.shape[3] == k.shape[3]
+    assert q.shape[2] % k.shape[2] == 0, "H must be a multiple of KH"
+    return flash_attention(q, k, v, causal=causal, block_q=block_q,
+                           block_k=block_k, interpret=interpret)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """q: [B,S,H,D], k/v: [B,S,KH,D] -> [B,S,H,D] (exact softmax attention)."""
+    B, S, H, D = q.shape
+    KH = k.shape[2]
+    rep = H // KH
+    qg = q.reshape(B, S, KH, rep, D)
+    s = jnp.einsum("bqhrd,bkhd->bhrqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(D).astype(jnp.float32)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), dtype=bool))
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", w, v.astype(jnp.float32))
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+def ssd_intra_chunk_ref(dtx, Bm, Cm, cumA):
+    """dtx: [G,q,p], Bm/Cm: [G,q,n], cumA: [G,q,1] -> (y [G,q,p], S [G,n,p])."""
+    q = dtx.shape[1]
+    cum = cumA[..., 0]                                    # [G, q]
+    cb = jnp.einsum("gin,gjn->gij", Cm, Bm)
+    ln = cum[:, :, None] - cum[:, None, :]
+    mask = jnp.tril(jnp.ones((q, q), dtype=bool))
+    ln = jnp.where(mask[None], ln, NEG_INF)
+    scores = cb * jnp.exp(ln)
+    y = jnp.einsum("gij,gjp->gip", scores, dtx)
+    seg = jnp.exp(cum[:, -1:] - cum)                      # [G, q]
+    s = jnp.einsum("gjn,gj,gjp->gnp", Bm, seg, dtx)
+    return y, s
+
+
+def spmv_block_ell_ref(blocks, cols, x):
+    """blocks: [nbr,max_bpr,bs,bs], cols: [nbr,max_bpr], x: [ncb*bs]."""
+    nbr, max_bpr, bs, _ = blocks.shape
+    xb = x.reshape(-1, bs)
+    gathered = xb[cols]                                   # [nbr, max_bpr, bs]
+    y = jnp.einsum("rsij,rsj->ri", blocks.astype(jnp.float32),
+                   gathered.astype(jnp.float32))
+    return y.reshape(nbr * bs).astype(x.dtype)

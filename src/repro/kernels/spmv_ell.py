@@ -1,0 +1,101 @@
+"""Block-ELL SpMV as a Pallas TPU kernel — the paper's SpMV hot-spot,
+adapted to TPU.
+
+Hardware adaptation (DESIGN.md §2): a CUDA CSR SpMV is a scalar-gather
+kernel, which the TPU's systolic MXU cannot exploit.  The TPU-native layout
+is *block*-sparse ELL: rows grouped into bs-row blocks, each block row
+holding up to ``max_bpr`` dense bs x bs blocks plus their block-column ids.
+Each grid step does one bs x bs MXU matmul; the needed x-block is selected
+by a scalar-prefetch index map (cols are prefetched to SMEM before the grid
+runs, so the x BlockSpec can depend on them).  Padding slots point at block
+column 0 with zero data — they contribute nothing.
+
+For AMG matrices, bs=8..32 matches the 3-dof node blocks well (see
+benchmarks/bench_kernels.py for the density trade-off).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _spmv_kernel(cols_ref, blocks_ref, x_ref, y_ref, acc, *, nslots: int):
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    a = blocks_ref[0, 0].astype(jnp.float32)        # [bs, bs]
+    xb = x_ref[0].astype(jnp.float32)               # [bs, 1]
+    acc[...] += jax.lax.dot(a, xb)
+
+    @pl.when(s == nslots - 1)
+    def _done():
+        y_ref[0] = acc[...].astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def spmv_block_ell(blocks, cols, x, interpret: bool = False):
+    """y = A @ x with A in block-ELL form.
+
+    blocks: [nbr, max_bpr, bs, bs]; cols: [nbr, max_bpr] int32 block-column
+    ids; x: [ncb * bs].  Returns y: [nbr * bs].
+    """
+    nbr, max_bpr, bs, _ = blocks.shape
+    x2 = x.reshape(-1, bs, 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nbr, max_bpr),
+        in_specs=[
+            pl.BlockSpec((1, 1, bs, bs), lambda r, s, cols: (r, s, 0, 0)),
+            pl.BlockSpec((1, bs, 1), lambda r, s, cols: (cols[r, s], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, 1), lambda r, s, cols: (r, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((bs, 1), jnp.float32)],
+    )
+    y = pl.pallas_call(
+        functools.partial(_spmv_kernel, nslots=max_bpr),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nbr, bs, 1), x.dtype),
+        interpret=interpret,
+    )(cols, blocks, x2)
+    return y.reshape(nbr * bs)
+
+
+# ------------------------------------------------- host-side conversion -----
+def csr_to_block_ell(csr, bs: int = 8):
+    """Convert a repro.sparse CSR matrix to padded block-ELL arrays."""
+    n, m = csr.shape
+    nbr = -(-n // bs)
+    ncb = -(-m // bs)
+    rows = np.repeat(np.arange(n), np.diff(csr.indptr))
+    br = rows // bs
+    bc = csr.indices // bs
+    # unique block coordinates
+    key = br * ncb + bc
+    uniq = np.unique(key)
+    ub, uc = uniq // ncb, uniq % ncb
+    counts = np.bincount(ub, minlength=nbr)
+    max_bpr = int(counts.max()) if counts.size else 1
+    blocks = np.zeros((nbr, max_bpr, bs, bs), dtype=np.float32)
+    cols = np.zeros((nbr, max_bpr), dtype=np.int32)
+    slot_of = {}
+    next_slot = np.zeros(nbr, dtype=np.int64)
+    for b_, c_ in zip(ub, uc):
+        s = next_slot[b_]
+        slot_of[(b_, c_)] = s
+        cols[b_, s] = c_
+        next_slot[b_] += 1
+    # scatter entries
+    for r, c, v in zip(rows, csr.indices, csr.data):
+        b_, c_ = r // bs, c // bs
+        s = slot_of[(b_, c_)]
+        blocks[b_, s, r % bs, c % bs] = v
+    return jnp.asarray(blocks), jnp.asarray(cols), max_bpr

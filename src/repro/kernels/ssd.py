@@ -1,0 +1,74 @@
+"""Mamba2 SSD intra-chunk kernel (Pallas TPU).
+
+The SSD block decomposition's compute hot-spot is the within-chunk part:
+for each (batch, chunk, head) program,
+
+    scores[i,j] = (C_i . B_j) * exp(cumA_i - cumA_j)   for i >= j
+    y[i]        = sum_j scores[i,j] * dtx[j]           [q, p]
+    S_c         = sum_j exp(cumA_last - cumA_j) B_j dtx_j^T   [n, p]
+
+Both matmuls are MXU-shaped ([q,n]x[n,q] and [q,q]x[q,p] with q=n=128,
+p=64); the whole working set (~250 KiB f32) sits in VMEM.  The inter-chunk
+recurrence (tiny state updates) stays in JAX.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _ssd_kernel(dtx_ref, b_ref, c_ref, a_ref, y_ref, s_ref, *, q: int):
+    dtx = dtx_ref[0].astype(jnp.float32)        # [q, p]
+    Bm = b_ref[0].astype(jnp.float32)           # [q, n]
+    Cm = c_ref[0].astype(jnp.float32)           # [q, n]
+    cumA = a_ref[0].astype(jnp.float32)         # [q, 1]
+
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))   # [q, q]
+    ln_decay = cumA - cumA.T                                     # [q, q] i-j
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    ln_decay = jnp.where(ii >= jj, ln_decay, NEG_INF)
+    scores = cb * jnp.exp(ln_decay)
+    y_ref[0] = jax.lax.dot(scores, dtx).astype(y_ref.dtype)      # [q, p]
+
+    seg = jnp.exp(cumA[-1:, :] - cumA)                           # [q, 1]
+    bw = Bm * seg                                                # [q, n]
+    s_ref[0] = jax.lax.dot_general(
+        bw, dtx, (((0,), (0,)), ((), ()))).astype(s_ref.dtype)   # [n, p]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk(dtx, Bm, Cm, cumA, interpret: bool = False):
+    """Batched intra-chunk SSD.
+
+    dtx: [G, q, p] (dt_j * x_j, f32); Bm/Cm: [G, q, n]; cumA: [G, q, 1]
+    (inclusive cumulative log-decay).  G = batch*chunks*heads, flattened by
+    the caller.  Returns (y_intra [G, q, p], S_c [G, n, p]).
+    """
+    G, q, p = dtx.shape
+    n = Bm.shape[-1]
+    y, s = pl.pallas_call(
+        functools.partial(_ssd_kernel, q=q),
+        grid=(G,),
+        in_specs=[
+            pl.BlockSpec((1, q, p), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, q, n), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, q, n), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, q, 1), lambda g: (g, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, p), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, n, p), lambda g: (g, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((G, q, p), jnp.float32),
+            jax.ShapeDtypeStruct((G, n, p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(dtx, Bm, Cm, cumA)
+    return y, s

@@ -1,0 +1,287 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The FIRST two lines below must run before any other import — jax locks the
+device count on first initialization.  512 placeholder host devices exist
+ONLY inside this entry point; tests and benchmarks see the real device count.
+
+Per cell we record:
+  * ``memory_analysis()`` — proves the program fits per-device HBM;
+  * ``cost_analysis()``   — per-device FLOPs / bytes for §Roofline;
+  * the collective table parsed from the compiled HLO, decomposed to p2p
+    messages and priced BOTH naively (bytes/link-bw) and with the paper's
+    node-aware max-rate + queue + contention model.
+
+Artifacts are JSON files under artifacts/dryrun/, resumable (existing cells
+are skipped unless --force).
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import numpy as np       # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import (ARCH_IDS, get_config, SHAPES, cell_applicable)  # noqa: E402
+from repro.core import parse_collectives, collective_summary, price_step  # noqa: E402
+from repro.core.decompose import PodGeometry  # noqa: E402
+from repro.core.params import tpu_v5e  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import (make_train_step, make_prefill_step,  # noqa: E402
+                                make_serve_step, input_specs,
+                                abstract_opt_state)
+from repro.nn.model import abstract_params  # noqa: E402
+from repro.parallel.sharding import (make_mesh_plan, param_pspecs,  # noqa: E402
+                                     batch_pspecs, cache_pspecs, shardings,
+                                     zero1_pspecs)
+from repro.parallel import context as pctx  # noqa: E402
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "artifacts", "dryrun")
+
+
+def cell_path(arch: str, shape: str, mesh_name: str, out_dir: str) -> str:
+    return os.path.join(out_dir, f"{arch}__{shape}__{mesh_name}.json")
+
+
+def _compile_one(cfg, shape, mesh, plan, seq_shard=True, q_chunk=1024,
+                 unroll=False, microbatch_override=None):
+    """Lower + compile one program; return (compiled, lower_s, compile_s)."""
+    params_abs = abstract_params(cfg)
+    # FSDP for >20B-param cells: in training, TP-sharded weights + grads
+    # alone exceed HBM; for 72B-class decode, TP=16 weights eat most of HBM,
+    # so big-model serving uses the weight-gathered (batch-amortized) layout
+    # too.  Small/medium models keep TP-only for serving latency.
+    fsdp = (cfg.n_params() > 20e9 if shape.kind == "train"
+            else cfg.n_params() > 15e9)
+    pspecs = param_pspecs(cfg, plan, fsdp=fsdp)
+    p_sh = shardings(pspecs, mesh)
+    ctx = pctx.ShardingContext(mesh=mesh, dp_axes=plan.dp_axes,
+                               seq_shard=seq_shard, q_chunk=q_chunk,
+                               unroll_loops=unroll)
+    t0 = time.time()
+    with mesh, pctx.use(ctx):
+        if shape.kind == "train":
+            microbatches = microbatch_override or (
+                16 if cfg.n_params() > 50e9
+                else 4 if (cfg.n_params() > 20e9 or cfg.is_moe)
+                else 2 if cfg.cross_attention else 1)
+            step = make_train_step(cfg, unroll=unroll,
+                                   microbatches=microbatches)
+            opt_abs = abstract_opt_state(params_abs)
+            mom_sh = shardings(zero1_pspecs(pspecs, cfg, plan), mesh)  # ZeRO-1
+            opt_sh = {"m": mom_sh, "v": mom_sh, "step": NamedSharding(mesh, P())}
+            batch = input_specs(cfg, shape)["batch"]
+            b_sh = shardings(batch_pspecs(plan, batch), mesh)
+            jitted = jax.jit(step, in_shardings=(p_sh, opt_sh, b_sh),
+                             out_shardings=(p_sh, opt_sh, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_abs, opt_abs, batch)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg, unroll=unroll)
+            batch = input_specs(cfg, shape)["batch"]
+            b_sh = shardings(batch_pspecs(plan, batch), mesh)
+            # explicit output shardings: without them GSPMD may replicate
+            # the emitted KV cache over the model axis (L x B x S x KH x hd
+            # at 32k context does not fit replicated)
+            out_struct = jax.eval_shape(step, params_abs, batch)
+            logits_s, cache_s = out_struct
+            cache_out_sh = shardings(cache_pspecs(plan, cache_s), mesh)
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh),
+                             out_shardings=(None, cache_out_sh))
+            lowered = jitted.lower(params_abs, batch)
+        else:  # decode
+            # decode lowers UNROLLED: no while-loop double-buffering of the
+            # KV cache, and cost_analysis flops are exact without calibration
+            step = make_serve_step(cfg, unroll=True)
+            spec = input_specs(cfg, shape)
+            c_sh = shardings(cache_pspecs(plan, spec["cache"]), mesh)
+            tok_sh = shardings(batch_pspecs(plan, spec["token"]), mesh)
+            jitted = jax.jit(step,
+                             in_shardings=(p_sh, c_sh, tok_sh,
+                                           NamedSharding(mesh, P())),
+                             out_shardings=(None, c_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_abs, spec["cache"], spec["token"],
+                                   spec["pos"])
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    return compiled, t_lower, t_compile
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               seq_shard: bool = True, q_chunk: int = 1024,
+               calibrate: bool = True, cfg_overrides: dict | None = None,
+               mesh_shape: tuple[int, int] | None = None,
+               microbatch_override: int | None = None):
+    """Lower + compile one cell.  Returns the artifact dict.
+
+    ``calibrate``: additionally compile the same cell with 2 and 4 scanned
+    layers; the delta gives exact XLA-accounted per-layer FLOPs/bytes
+    (cost_analysis counts while bodies once, so the full-depth numbers must
+    be reconstructed as entry + L * per-layer).
+    """
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    if (shape.kind == "decode" and cfg.n_params() > 50e9
+            and not cfg_overrides):
+        # production serving default for 72B-class: int8 KV cache
+        cfg = _dc.replace(cfg, kv_quant=True)
+    ok, why = cell_applicable(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    base = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "kind": shape.kind, "seq_len": shape.seq_len,
+            "global_batch": shape.global_batch,
+            "n_params": cfg.n_params(), "n_active_params": cfg.n_active_params()}
+    if not ok:
+        return {**base, "status": "skipped", "reason": why}
+
+    if mesh_shape is not None:
+        import jax as _jax
+        mesh = _jax.make_mesh(mesh_shape, ("data", "model"),
+                              axis_types=(_jax.sharding.AxisType.Auto,) * 2)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    plan = make_mesh_plan(mesh)
+    n_scanned = cfg.n_layers - cfg.first_dense_layers
+
+    if shape.kind == "prefill":
+        q_chunk = min(q_chunk, 512)   # 32k-seq score blocks at half size
+    compiled, t_lower, t_compile = _compile_one(
+        cfg, shape, mesh, plan, seq_shard, q_chunk,
+        microbatch_override=microbatch_override)
+    ma = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    text = compiled.as_text()
+    ops = parse_collectives(text, default_trip_count=n_scanned)
+    geom = PodGeometry(n_pods=2 if multi_pod else 1)
+    comm = price_step(ops, geom, tpu_v5e())
+
+    flops_corr = bytes_corr = None
+    if calibrate and n_scanned > 4 and shape.kind != "decode":
+        small = {}
+        for L in (2, 4):
+            c2 = _dc.replace(cfg, n_layers=L + cfg.first_dense_layers,
+                             encoder_layers=min(cfg.encoder_layers, L))
+            comp, _, _ = _compile_one(c2, shape, mesh, plan, seq_shard,
+                                      q_chunk, unroll=True)
+            cst = comp.cost_analysis()
+            small[L] = (cst.get("flops", 0.0), cst.get("bytes accessed", 0.0))
+        per_layer_f = (small[4][0] - small[2][0]) / 2.0
+        per_layer_b = (small[4][1] - small[2][1]) / 2.0
+        enc_corr = 0
+        if cfg.encoder_layers:
+            enc_corr = cfg.encoder_layers - min(cfg.encoder_layers, 2)
+        flops_corr = small[2][0] + (n_scanned - 2 + enc_corr) * per_layer_f
+        bytes_corr = small[2][1] + (n_scanned - 2 + enc_corr) * per_layer_b
+
+    art = {
+        **base,
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "seq_shard": seq_shard,
+        "q_chunk": q_chunk,
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_bytes": (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                           + ma.temp_size_in_bytes - ma.alias_size_in_bytes),
+        },
+        "cost": {
+            "flops_per_device_raw": cost.get("flops", 0.0),
+            "bytes_per_device_raw": cost.get("bytes accessed", 0.0),
+            "flops_per_device": flops_corr or cost.get("flops", 0.0),
+            "bytes_per_device": bytes_corr or cost.get("bytes accessed", 0.0),
+            "transcendentals": cost.get("transcendentals", 0.0),
+        },
+        "collectives": collective_summary(ops),
+        "comm_model": comm.as_dict(),
+        "scan_trip_count": n_scanned,
+    }
+    # trim the per-op list (can be long) to the essentials
+    art["comm_model"]["ops"] = [
+        {k: o[k] for k in ("kind", "count", "payload_bytes", "naive_time",
+                           "transport", "queue", "contention")}
+        for o in art["comm_model"]["ops"]]
+    return art
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=os.path.abspath(ART_DIR))
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-seq-shard", action="store_true",
+                    help="disable Megatron-SP residual sequence sharding")
+    ap.add_argument("--q-chunk", type=int, default=1024,
+                    help="query-chunk size for blockwise attention (0=off)")
+    ap.add_argument("--no-calibrate", action="store_true",
+                    help="skip the 2/4-layer flops calibration compiles")
+    ap.add_argument("--tag", default="",
+                    help="artifact filename suffix (for variant runs)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_ok = n_skip = n_fail = n_cached = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = ("pod2x16x16" if mp else "pod16x16") + args.tag
+                path = cell_path(arch, shape, mesh_name, args.out)
+                if os.path.exists(path) and not args.force:
+                    prev = json.load(open(path))
+                    if prev.get("status") in ("ok", "skipped"):
+                        n_cached += 1
+                        continue
+                t0 = time.time()
+                try:
+                    art = lower_cell(arch, shape, mp,
+                                     seq_shard=not args.no_seq_shard,
+                                     q_chunk=args.q_chunk,
+                                     calibrate=not args.no_calibrate)
+                    art["mesh"] = mesh_name
+                except Exception as e:  # noqa: BLE001
+                    art = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "status": "failed", "error": str(e),
+                           "traceback": traceback.format_exc()[-4000:]}
+                with open(path, "w") as f:
+                    json.dump(art, f, indent=1, default=float)
+                st = art["status"]
+                n_ok += st == "ok"
+                n_skip += st == "skipped"
+                n_fail += st == "failed"
+                msg = ""
+                if st == "ok":
+                    peak = art["memory"]["peak_bytes"] / 2**30
+                    msg = (f"peak={peak:.2f}GiB "
+                           f"flops/dev={art['cost']['flops_per_device']:.3e} "
+                           f"compile={art['compile_s']}s")
+                elif st == "failed":
+                    msg = art["error"][:160]
+                print(f"[{time.strftime('%H:%M:%S')}] {arch} x {shape} x "
+                      f"{mesh_name}: {st} {msg} ({time.time()-t0:.1f}s)",
+                      flush=True)
+    print(f"done: ok={n_ok} skipped={n_skip} failed={n_fail} cached={n_cached}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Generate the §Roofline table (markdown) from dry-run artifacts.
+
+    PYTHONPATH=src python -m repro.launch.roofline [--mesh pod16x16]
+
+Per (arch x shape x mesh): the three roofline terms in seconds, the dominant
+term, MODEL_FLOPS/HLO_FLOPS, and the collective term priced both naively and
+with the paper's model.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.core.params import V5E_PEAK_FLOPS_BF16, V5E_HBM_BW
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                   "artifacts", "dryrun")
+
+
+def analyze(a: dict) -> dict:
+    flops = a["cost"]["flops_per_device"]
+    byts = a["cost"]["bytes_per_device"]
+    cm = a["comm_model"]
+    compute = flops / V5E_PEAK_FLOPS_BF16
+    memory = byts / V5E_HBM_BW
+    coll = cm["model_time"]
+    dom = max((compute, "compute"), (memory, "memory"), (coll, "collective"))[1]
+    tokens = (a["global_batch"] * a["seq_len"] if a["kind"] != "decode"
+              else a["global_batch"])
+    mult = 6 if a["kind"] == "train" else 2
+    chips = 512 if "2x16x16" in a["mesh"] else 256
+    model_flops = mult * a["n_active_params"] * tokens / chips
+    total = compute + memory + coll
+    return {
+        "arch": a["arch"], "shape": a["shape"], "mesh": a["mesh"],
+        "compute_s": compute, "memory_s": memory,
+        "coll_naive_s": cm["naive_time"], "coll_bienz_s": coll,
+        "queue_s": cm["queue"], "contention_s": cm["contention"],
+        "dominant": dom,
+        "model/hlo": model_flops / flops if flops else 0.0,
+        "roofline_frac": max(compute, memory) / total if total else 0.0,
+        "peak_gib": a["memory"]["peak_bytes"] / 2**30,
+        "fits": a["memory"]["peak_bytes"] < 15.5 * 2**30,
+    }
+
+
+def load(mesh_filter: str | None = None, art_dir: str | None = None):
+    rows, skips = [], []
+    for f in sorted(glob.glob(os.path.join(art_dir or ART, "*.json"))):
+        a = json.load(open(f))
+        if mesh_filter and mesh_filter not in a.get("mesh", ""):
+            continue
+        if a.get("status") == "ok":
+            rows.append(analyze(a))
+        elif a.get("status") == "skipped":
+            skips.append((a["arch"], a["shape"], a["mesh"], a["reason"]))
+    return rows, skips
+
+
+def to_markdown(rows, skips) -> str:
+    hdr = ("| arch | shape | mesh | compute_s | memory_s | coll_naive_s | "
+           "coll_bienz_s | dominant | 6ND/HLO | frac | peak GiB | fits |")
+    sep = "|" + "---|" * 12
+    lines = [hdr, sep]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['coll_naive_s']:.3e} | {r['coll_bienz_s']:.3e} "
+            f"| {r['dominant']} | {r['model/hlo']:.2f} "
+            f"| {r['roofline_frac']:.2f} | {r['peak_gib']:.1f} "
+            f"| {'y' if r['fits'] else 'N'} |")
+    if skips:
+        lines.append("")
+        lines.append("Skipped cells (documented in DESIGN.md "
+                     "§Arch-applicability):")
+        for (a, s, m, why) in skips:
+            lines.append(f"* {a} x {s} x {m}: {why[:100]}")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    rows, skips = load(args.mesh)
+    md = to_markdown(rows, skips)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(md + "\n")
+    print(md)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Step functions (train / prefill / serve) + abstract input specs per cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, no device allocation — exactly what
+``jax.jit(...).lower()`` needs for the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import ShapeSpec
+from repro.nn.config import ArchConfig
+from repro.nn import model as M
+from repro.train.optim import AdamWConfig, init_opt_state, adamw_update
+
+PyTree = Any
+
+
+# ------------------------------------------------------------- steps --------
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig | None = None,
+                    remat: bool = True, unroll: bool = False,
+                    microbatches: int = 1):
+    """Build the jittable train step (loss + grad + AdamW).
+
+    ``microbatches > 1`` scans over gradient-accumulation slices — per-device
+    activation memory scales down by the slice count (how the >20B cells fit
+    v5e HBM) at the cost of re-running the collective schedule per slice.
+    """
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def grads_of(params, batch):
+        def loss_fn(p):
+            loss, metrics = M.lm_loss(p, cfg, batch, remat=remat,
+                                      unroll=unroll)
+            return loss, metrics
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda a: a.reshape((microbatches, a.shape[0] // microbatches)
+                                    + a.shape[1:]), batch)
+
+            def body(acc, b):
+                (l, m), g = grads_of(params, b)
+                acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32) / microbatches,
+                    acc, (l, g))
+                return acc, m
+            zero = (jnp.zeros((), jnp.float32),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params))
+            (loss, grads), ms = jax.lax.scan(body, zero, mb)
+            metrics = jax.tree.map(lambda a: a[-1], ms)
+        params, opt_state, opt_metrics = adamw_update(params, grads, opt_state,
+                                                      opt_cfg)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, unroll: bool = False):
+    def prefill_step(params, batch):
+        return M.prefill(params, cfg,
+                         tokens=batch.get("tokens"),
+                         embeds=batch.get("embeds"),
+                         enc_frames=batch.get("frames"),
+                         unroll=unroll)
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, unroll: bool = False):
+    def serve_step(params, cache, token, pos):
+        return M.decode_step(params, cfg, cache, token, pos, unroll=unroll)
+    return serve_step
+
+
+# ------------------------------------------------------- abstract inputs ----
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """Abstract model inputs for one (arch x shape) cell.
+
+    train/prefill: the batch dict.  decode: {"cache", "token", "pos"} with the
+    KV cache sized to the cell's seq_len.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            batch = {"embeds": _sds((B, S, cfg.d_model), jnp.bfloat16),
+                     "positions": _sds((B, S, 3), jnp.int32)}
+            if shape.kind == "train":
+                batch["targets"] = _sds((B, S), jnp.int32)
+        else:
+            batch = {"tokens": _sds((B, S), jnp.int32)}
+            if cfg.family == "audio":
+                batch["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model),
+                                       jnp.bfloat16)
+        return {"batch": batch}
+    # decode: one new token against a seq_len cache
+    cache = M.abstract_cache(cfg, B, S)
+    return {"cache": cache,
+            "token": _sds((B,), jnp.int32),
+            "pos": _sds((), jnp.int32)}
+
+
+def abstract_opt_state(params_abstract: PyTree) -> PyTree:
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return {"m": jax.tree.map(f32, params_abstract),
+            "v": jax.tree.map(f32, params_abstract),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}

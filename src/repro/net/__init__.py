@@ -1,0 +1,22 @@
+"""Mechanistic network simulator — the framework's "measured" data source.
+
+No Cray hardware is available, so the paper's Blue Waters measurements are
+replaced by an event-level simulator (:mod:`repro.net.simulator`) that prices
+every message with ground-truth parameters, *actually walks* MPI receive
+queues, and routes bytes over a torus with per-link accounting.  The model in
+:mod:`repro.core` then has to predict this simulator across the same
+inferential gap the paper has between closed-form model and machine.
+"""
+from .machine import MachineSpec, blue_waters_machine, tpu_v5e_machine
+from .simulator import PhaseResult, simulate_phase
+from .pingpong import (
+    pingpong_time, pingpong_sweep, ppn_sweep, high_volume_pingpong,
+    contention_line_test,
+)
+
+__all__ = [
+    "MachineSpec", "blue_waters_machine", "tpu_v5e_machine",
+    "PhaseResult", "simulate_phase",
+    "pingpong_time", "pingpong_sweep", "ppn_sweep", "high_volume_pingpong",
+    "contention_line_test",
+]

@@ -1,0 +1,111 @@
+"""Machine descriptions: process -> node -> torus-node maps and ground truth.
+
+Blue Waters: 3-D Gemini torus; each Gemini serves 2 XE nodes; each node has
+2 sockets x 8 cores = 16 ppn — the torus unit (Gemini) *contains* nodes.
+
+TPU v5e: 2-D ICI torus of chips, one "process" per chip, 4 chips per host —
+the torus unit (chip) is *contained in* the node (host).  ``torus_over_procs``
+switches between the two nestings.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.params import CommParams, blue_waters, tpu_v5e
+from repro.core.topology import TorusTopology
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineSpec:
+    name: str
+    params: CommParams            # ground-truth parameters for the simulator
+    torus: TorusTopology          # torus of torus-units (Geminis / chips)
+    nodes_per_torus_node: int     # BW: 2 nodes per Gemini; TPU: n/a (set 1)
+    procs_per_node: int           # BW: 16 ppn; TPU: 4 chips(procs) per host
+    sockets_per_node: int
+    link_bw: float                # per-torus-link bandwidth (bytes/s)
+    torus_over_procs: bool = False  # TPU: each proc(chip) is its own torus node
+    cross_node_locality: int = 2    # locality class for cross-node traffic
+
+    @property
+    def procs_per_torus_node(self) -> int:
+        if self.torus_over_procs:
+            return 1
+        return self.nodes_per_torus_node * self.procs_per_node
+
+    @property
+    def n_procs(self) -> int:
+        return self.torus.size * self.procs_per_torus_node
+
+    # -- maps ---------------------------------------------------------------
+    def node_of(self, p) -> np.ndarray:
+        return np.asarray(p) // self.procs_per_node
+
+    def socket_of(self, p) -> np.ndarray:
+        p = np.asarray(p)
+        per_socket = max(1, self.procs_per_node // self.sockets_per_node)
+        return (p % self.procs_per_node) // per_socket
+
+    def torus_node_of(self, p) -> np.ndarray:
+        if self.torus_over_procs:
+            return np.asarray(p)
+        return self.node_of(p) // self.nodes_per_torus_node
+
+    def locality(self, a, b) -> np.ndarray:
+        """Locality class index per (a, b) pair (vectorized).
+
+        Blue Waters: 0 = intra-socket, 1 = intra-node, 2 = inter-node.
+        TPU v5e:     0 = intra-host,  1 = intra-pod ICI (cross-host).
+        """
+        a, b = np.asarray(a), np.asarray(b)
+        same_node = self.node_of(a) == self.node_of(b)
+        if self.sockets_per_node > 1:
+            same_socket = same_node & (self.socket_of(a) == self.socket_of(b))
+            mid = np.where(same_node, 1, self.cross_node_locality)
+            return np.where(same_socket, 0, mid).astype(np.int64)
+        return np.where(same_node, 0, self.cross_node_locality).astype(np.int64)
+
+    def procs_of_node(self, node: int) -> np.ndarray:
+        base = node * self.procs_per_node
+        return np.arange(base, base + self.procs_per_node)
+
+
+def blue_waters_machine(torus_dims: tuple[int, ...] = (4, 4, 4),
+                        wrap: bool = False) -> MachineSpec:
+    """A partition of Blue Waters' Gemini torus.
+
+    ``wrap=False`` because a job partition inside the full torus does not
+    wrap.  Gemini link bandwidth ~9.4 GB/s per direction.
+    """
+    return MachineSpec(
+        name="blue_waters",
+        params=blue_waters(),
+        torus=TorusTopology(torus_dims, wrap=wrap),
+        nodes_per_torus_node=2,
+        procs_per_node=16,
+        sockets_per_node=2,
+        link_bw=9.4e9,
+    )
+
+
+def tpu_v5e_machine(torus_dims: tuple[int, int] = (16, 16)) -> MachineSpec:
+    """One TPU v5e pod: 2-D ICI torus of chips, 4 chips per host.
+
+    One process per chip; the "node" is the host (4 chips).  Locality 0 =
+    intra-host, 1 = intra-pod ICI.  Inter-pod DCN (class 2) only appears in
+    multi-pod model evaluation via :mod:`repro.core.decompose`, never in the
+    single-pod simulator.
+    """
+    return MachineSpec(
+        name="tpu_v5e",
+        params=tpu_v5e(),
+        torus=TorusTopology(torus_dims, wrap=True),
+        nodes_per_torus_node=1,
+        procs_per_node=4,         # chips per host
+        sockets_per_node=1,
+        link_bw=50e9,
+        torus_over_procs=True,
+        cross_node_locality=1,
+    )

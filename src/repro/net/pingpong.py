@@ -1,0 +1,125 @@
+"""Ping-pong harnesses (paper Section 4, Algorithm 1) on the simulator.
+
+These generate the measurement sets the paper collects with Baseenv on Blue
+Waters: classic two-process ping-pongs split by locality (Figs. 2-3), the
+ppn sweep behind the max-rate R_N measurement, the HighVolumePingPong with
+same/reversed receive ordering (Figs. 4-5) and the 1-D Gemini-line contention
+test (Figs. 6-7, 9).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .machine import MachineSpec
+from .simulator import simulate_phase, PhaseResult
+
+
+def _pair_for(machine: MachineSpec, kind: str) -> tuple[int, int]:
+    """A canonical process pair for each locality class."""
+    ppn = machine.procs_per_node
+    if kind == "intra_socket" or (kind == "closest"):
+        return 0, 1
+    if kind == "intra_node":
+        if machine.sockets_per_node > 1:
+            return 0, ppn // machine.sockets_per_node  # cross-socket
+        return 0, 1
+    if kind == "inter_node":
+        return 0, ppn * machine.nodes_per_torus_node  # next torus node over
+    raise ValueError(f"unknown pair kind {kind!r}")
+
+
+def pingpong_time(machine: MachineSpec, a: int, b: int, size: float,
+                  rng=None, noise: float = 0.0) -> float:
+    """Half round-trip time for a single message of ``size`` bytes."""
+    t1 = simulate_phase(machine, [a], [b], [size], rng=rng, noise=noise).time
+    t2 = simulate_phase(machine, [b], [a], [size], rng=rng, noise=noise).time
+    return 0.5 * (t1 + t2)
+
+
+def pingpong_sweep(machine: MachineSpec, kind: str, sizes,
+                   reps: int = 4, noise: float = 0.02,
+                   seed: int = 0) -> np.ndarray:
+    """Mean ping-pong time per size for a locality class (Figs. 2-3 data)."""
+    a, b = _pair_for(machine, kind)
+    rng = np.random.default_rng(seed)
+    out = []
+    for s in sizes:
+        ts = [pingpong_time(machine, a, b, float(s), rng=rng, noise=noise)
+              for _ in range(reps)]
+        out.append(np.mean(ts))
+    return np.asarray(out)
+
+
+def ppn_sweep(machine: MachineSpec, size: float, max_ppn: int | None = None,
+              noise: float = 0.0, seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """Inter-node exchange with k = 1..ppn active pairs (max-rate R_N data).
+
+    Process i on node 0 sends one ``size``-byte message to process i on the
+    next torus node over.  Returns (ppn values, phase times).
+    """
+    ppn = machine.procs_per_node
+    max_ppn = max_ppn or ppn
+    other = machine.procs_per_node * machine.nodes_per_torus_node
+    rng = np.random.default_rng(seed)
+    ks, ts = [], []
+    for k in range(1, max_ppn + 1):
+        src = np.arange(k)
+        dst = other + np.arange(k)
+        res = simulate_phase(machine, src, dst, np.full(k, float(size)),
+                             rng=rng, noise=noise)
+        ks.append(k)
+        ts.append(res.time)
+    return np.asarray(ks), np.asarray(ts)
+
+
+def high_volume_pingpong(machine: MachineSpec, pairs, n: int, size: float,
+                         order: str = "same", noise: float = 0.0,
+                         seed: int = 0) -> tuple[float, PhaseResult, PhaseResult]:
+    """Algorithm 1: each (a, b) pair exchanges ``n`` messages of ``size`` bytes.
+
+    ``order='same'``: receives posted in arrival order (O(n) queue cost).
+    ``order='reversed'``: receives posted opposite to arrival order — every
+    arrival walks the whole remaining queue (O(n^2), paper Fig. 4 right).
+    Returns (total time, phase a->b, phase b->a).
+    """
+    pairs = list(pairs)
+    src, dst = [], []
+    for a, b in pairs:
+        src += [a] * n
+        dst += [b] * n
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    sizes = np.full(src.shape, float(size))
+    rng = np.random.default_rng(seed)
+
+    def post_order(dsts):
+        if order == "same":
+            return None
+        po = {}
+        for p in np.unique(dsts):
+            ids = np.nonzero(dsts == p)[0]
+            po[int(p)] = ids[::-1]          # posted opposite to arrival
+        return po
+
+    r1 = simulate_phase(machine, src, dst, sizes, recv_post_order=post_order(dst),
+                        rng=rng, noise=noise)
+    r2 = simulate_phase(machine, dst, src, sizes, recv_post_order=post_order(src),
+                        rng=rng, noise=noise)
+    return r1.time + r2.time, r1, r2
+
+
+def contention_line_test(machine: MachineSpec, n: int, size: float,
+                         order: str = "same", noise: float = 0.0,
+                         seed: int = 0) -> tuple[float, PhaseResult, PhaseResult]:
+    """Paper Fig. 6: Geminis G0..G3 on a line; G0->G2 and G1->G3 pairwise.
+
+    All bytes funnel through the single G1-G2 link, producing contention that
+    the max-rate + queue model misses (Fig. 7) and the delta*ell term captures
+    (Fig. 9).  ``machine`` should be a 1-D line partition, e.g.
+    ``blue_waters_machine((4, 1, 1))``.
+    """
+    ppt = machine.procs_per_torus_node
+    pairs = [(0 * ppt + j, 2 * ppt + j) for j in range(ppt)]
+    pairs += [(1 * ppt + j, 3 * ppt + j) for j in range(ppt)]
+    return high_volume_pingpong(machine, pairs, n, size, order=order,
+                                noise=noise, seed=seed)

@@ -1,0 +1,11 @@
+"""Neural substrate: unified LM implementation for the assigned architectures."""
+from .config import ArchConfig
+from .model import (param_shapes, abstract_params, init_params, forward_logits,
+                    lm_loss, decode_step, prefill, abstract_cache, init_cache,
+                    cache_shapes)
+
+__all__ = [
+    "ArchConfig", "param_shapes", "abstract_params", "init_params",
+    "forward_logits", "lm_loss", "decode_step", "prefill", "abstract_cache",
+    "init_cache", "cache_shapes",
+]

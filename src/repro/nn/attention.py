@@ -1,0 +1,168 @@
+"""Grouped-query attention: full (train/prefill), cached decode, cross-attn.
+
+Pure-jnp reference path (what the dry-run lowers — analyzable HLO); the
+Pallas flash kernel in :mod:`repro.kernels` is the TPU production path with
+identical semantics (validated against this in tests).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import apply_rope, apply_m_rope, rmsnorm
+
+NEG_INF = -1e30
+
+
+def _project_qkv(x, p, cfg: ArchConfig):
+    hd = cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(
+        x.shape[0], x.shape[1], cfg.n_heads, hd)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(
+        x.shape[0], x.shape[1], cfg.n_kv_heads, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(
+        x.shape[0], x.shape[1], cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _rope_qk(q, k, positions, cfg: ArchConfig):
+    if cfg.m_rope:
+        return (apply_m_rope(q, positions, cfg.rope_theta),
+                apply_m_rope(k, positions, cfg.rope_theta))
+    return (apply_rope(q, positions, cfg.rope_theta),
+            apply_rope(k, positions, cfg.rope_theta))
+
+
+def _sdpa_block(q, k, v, causal: bool, q_offset):
+    """q: [B,Sq,H,D], k/v: [B,Sk,KH,D] -> [B,Sq,H,D] (GQA by head repeat)."""
+    B, Sq, H, D = q.shape
+    KH = k.shape[2]
+    rep = H // KH
+    qg = q.reshape(B, Sq, KH, rep, D)
+    scores = jnp.einsum("bqhrd,bkhd->bhrqk", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(D).astype(jnp.float32)
+    if causal:
+        qpos = jnp.arange(Sq) + q_offset
+        kpos = jnp.arange(k.shape[1])
+        mask = kpos[None, :] <= qpos[:, None]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", w, v)
+    return out.reshape(B, Sq, H, D)
+
+
+def _sdpa(q, k, v, causal: bool, q_offset=0, q_chunk: int | None = None):
+    """Attention with optional query chunking.
+
+    Long sequences scan over query blocks (each block attends the full K/V
+    with masking) so S^2 score tensors never materialize — the pure-jnp
+    analogue of the flash kernel's outer loop; the inner body is rematerialized
+    in the backward pass.
+    """
+    B, Sq, H, D = q.shape
+    from repro.parallel import context as pctx
+    ctx = pctx.current()
+    q_chunk = q_chunk or (ctx.q_chunk if ctx else 0)
+    if not q_chunk or Sq <= q_chunk or Sq % q_chunk != 0:
+        return _sdpa_block(q, k, v, causal, q_offset)
+    nb = Sq // q_chunk
+    qb = q.reshape(B, nb, q_chunk, H, D)
+
+    if ctx is not None and ctx.unroll_loops:
+        outs = [_sdpa_block(qb[:, i], k, v, causal, q_offset + i * q_chunk)
+                for i in range(nb)]
+        return jnp.stack(outs, axis=1).reshape(B, Sq, H, D)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        qi, i = inp
+        out = _sdpa_block(qi, k, v, causal, q_offset + i * q_chunk)
+        return carry, out
+
+    _, outs = jax.lax.scan(body, (),
+                           (jnp.moveaxis(qb, 1, 0), jnp.arange(nb)))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, D)
+
+
+def attention(x, p, cfg: ArchConfig, positions, causal: bool = True):
+    """Full self-attention (training / prefill)."""
+    q, k, v = _project_qkv(x, p, cfg)
+    if cfg.rope_theta:
+        q, k = _rope_qk(q, k, positions, cfg)
+    out = _sdpa(q, k, v, causal)
+    out = out.reshape(x.shape[0], x.shape[1], cfg.n_heads * cfg.head_dim)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"]), (k, v)
+
+
+def decode_attention(x, p, cfg: ArchConfig, cache_k, cache_v, pos,
+                     k_scale=None, v_scale=None):
+    """One-token decode against a KV cache.
+
+    x: [B, 1, d]; cache_k/v: [B, S_max, KH, D] (sequence dim shardable);
+    pos: scalar current position.  With ``cfg.kv_quant`` the cache is int8
+    and ``k_scale``/``v_scale`` [B, S_max, KH] hold per-entry scales.
+    Returns (out [B,1,d], new_k, new_v[, new_k_scale, new_v_scale]).
+    """
+    B = x.shape[0]
+    q, k, v = _project_qkv(x, p, cfg)
+    if cfg.rope_theta:
+        positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+        if cfg.m_rope:
+            positions = jnp.broadcast_to(positions[..., None], (B, 1, 3))
+        q, k = _rope_qk(q, k, positions, cfg)
+
+    new_scales = ()
+    if cfg.kv_quant:
+        def quant(val):
+            s = jnp.max(jnp.abs(val.astype(jnp.float32)), axis=-1) / 127.0
+            s = jnp.maximum(s, 1e-8)                       # [B,1,KH]
+            qv = jnp.clip(jnp.round(val.astype(jnp.float32) / s[..., None]),
+                          -127, 127).astype(jnp.int8)
+            return qv, s
+        kq, ks = quant(k)
+        vq, vs = quant(v)
+        new_k = jax.lax.dynamic_update_slice(cache_k, kq, (0, pos, 0, 0))
+        new_v = jax.lax.dynamic_update_slice(cache_v, vq, (0, pos, 0, 0))
+        nks = jax.lax.dynamic_update_slice(k_scale, ks, (0, pos, 0))
+        nvs = jax.lax.dynamic_update_slice(v_scale, vs, (0, pos, 0))
+        k_eff = new_k.astype(jnp.float32) * nks[..., None]
+        v_eff = (new_v.astype(jnp.float32) * nvs[..., None]).astype(jnp.bfloat16)
+        new_scales = (nks, nvs)
+    else:
+        new_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                             (0, pos, 0, 0))
+        new_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                             (0, pos, 0, 0))
+        k_eff, v_eff = new_k, new_v
+
+    # mask out positions beyond pos
+    S = cache_k.shape[1]
+    KH, D = cfg.n_kv_heads, cfg.head_dim
+    rep = cfg.n_heads // KH
+    qg = q.reshape(B, 1, KH, rep, D)
+    scores = jnp.einsum("bqhrd,bkhd->bhrqk", qg, k_eff).astype(jnp.float32)
+    scores = scores / jnp.sqrt(D).astype(jnp.float32)
+    valid = (jnp.arange(S) <= pos)[None, None, None, None, :]
+    scores = jnp.where(valid, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v_eff.dtype)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", w, v_eff).reshape(
+        B, 1, cfg.n_heads * D).astype(x.dtype)
+    return (jnp.einsum("bsh,hd->bsd", out, p["wo"]), new_k, new_v) + new_scales
+
+
+def cross_attention(x, p, cfg: ArchConfig, enc_out):
+    """Decoder cross-attention onto encoder output (whisper)."""
+    B, Sq, _ = x.shape
+    hd = cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(B, Sq, cfg.n_heads, hd)
+    k = jnp.einsum("bsd,dh->bsh", enc_out, p["wk"]).reshape(
+        B, enc_out.shape[1], cfg.n_kv_heads, hd)
+    v = jnp.einsum("bsd,dh->bsh", enc_out, p["wv"]).reshape(
+        B, enc_out.shape[1], cfg.n_kv_heads, hd)
+    out = _sdpa(q, k, v, causal=False)
+    out = out.reshape(B, Sq, cfg.n_heads * hd)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"])

@@ -1,0 +1,128 @@
+"""Decoder/encoder blocks, unified across attn / moe / ssm / hybrid families.
+
+Each block is a pure function ``(x, layer_params, cfg, ...) -> x`` designed to
+be scanned over stacked layer parameters ([L, ...] leaves).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .attention import attention, decode_attention, cross_attention
+from .config import ArchConfig
+from .layers import mlp, norm
+from .moe import moe_ffn
+from .ssm import ssm_mixer, ssm_decode
+
+
+def _norm(x, p, cfg):
+    return norm(x, p, cfg.norm_type, cfg.norm_eps)
+
+
+# ----------------------------------------------------------- full-seq -------
+def block_forward(x, lp, cfg: ArchConfig, positions, causal: bool = True,
+                  collect_cache: bool = False):
+    """One decoder block, full sequence (train / prefill).
+
+    Returns (x, aux_loss, cache_el): ``cache_el`` is a dict of decode-cache
+    elements ({"k","v"} and/or {"conv","ssd"}) when ``collect_cache``.
+    """
+    aux = jnp.zeros((), dtype=jnp.float32)
+    cache_el: dict = {}
+    kind = cfg.block_kind
+
+    if kind == "ssm":
+        res = ssm_mixer(_norm(x, lp["ln1"], cfg), lp["ssm"], cfg,
+                        return_state=collect_cache)
+        if collect_cache:
+            y, (conv_st, ssd_st) = res
+            cache_el.update(conv=conv_st, ssd=ssd_st)
+        else:
+            y = res
+        x = x + y
+    elif kind == "hybrid":
+        xn = _norm(x, lp["ln1"], cfg)
+        a_out, kv = attention(xn, lp["attn"], cfg, positions, causal=causal)
+        res = ssm_mixer(xn, lp["ssm"], cfg, return_state=collect_cache)
+        if collect_cache:
+            s_out, (conv_st, ssd_st) = res
+            cache_el.update(k=kv[0], v=kv[1], conv=conv_st, ssd=ssd_st)
+        else:
+            s_out = res
+        x = x + 0.5 * (a_out + s_out)
+    else:
+        a_out, kv = attention(_norm(x, lp["ln1"], cfg), lp["attn"], cfg,
+                              positions, causal=causal)
+        if collect_cache:
+            cache_el.update(k=kv[0], v=kv[1])
+        x = x + a_out
+
+    if kind == "moe":
+        m_out, aux = moe_ffn(_norm(x, lp["ln2"], cfg), lp["moe"], cfg)
+        x = x + m_out
+    elif cfg.d_ff:
+        x = x + mlp(_norm(x, lp["ln2"], cfg), lp["mlp"], cfg.mlp_type)
+    return x, aux, cache_el
+
+
+def encoder_block(x, lp, cfg: ArchConfig, positions):
+    """Bidirectional encoder block (whisper)."""
+    a_out, _ = attention(_norm(x, lp["ln1"], cfg), lp["attn"], cfg,
+                         positions, causal=False)
+    x = x + a_out
+    x = x + mlp(_norm(x, lp["ln2"], cfg), lp["mlp"], cfg.mlp_type)
+    return x
+
+
+def cross_block(x, lp, cfg: ArchConfig, positions, enc_out):
+    """Decoder block with cross-attention (whisper decoder)."""
+    a_out, kv = attention(_norm(x, lp["ln1"], cfg), lp["attn"], cfg,
+                          positions, causal=True)
+    x = x + a_out
+    x = x + cross_attention(_norm(x, lp["ln3"], cfg), lp["xattn"], cfg, enc_out)
+    x = x + mlp(_norm(x, lp["ln2"], cfg), lp["mlp"], cfg.mlp_type)
+    return x, kv
+
+
+# -------------------------------------------------------------- decode ------
+def block_decode(x, lp, cfg: ArchConfig, cache_l: dict, pos):
+    """One-token decode through one block.  Returns (x, new_cache_l)."""
+    new_cache = dict(cache_l)
+    kind = cfg.block_kind
+
+    def _dec_attn(xn):
+        res = decode_attention(xn, lp["attn"], cfg, cache_l["k"],
+                               cache_l["v"], pos,
+                               k_scale=cache_l.get("k_scale"),
+                               v_scale=cache_l.get("v_scale"))
+        a_out, nk, nv = res[:3]
+        new_cache.update(k=nk, v=nv)
+        if cfg.kv_quant:
+            new_cache.update(k_scale=res[3], v_scale=res[4])
+        return a_out
+
+    if kind == "ssm":
+        y, new_conv, new_ssd = ssm_decode(_norm(x, lp["ln1"], cfg), lp["ssm"],
+                                          cfg, cache_l["conv"], cache_l["ssd"])
+        x = x + y
+        new_cache["conv"], new_cache["ssd"] = new_conv, new_ssd
+    elif kind == "hybrid":
+        xn = _norm(x, lp["ln1"], cfg)
+        a_out = _dec_attn(xn)
+        s_out, new_conv, new_ssd = ssm_decode(xn, lp["ssm"], cfg,
+                                              cache_l["conv"], cache_l["ssd"])
+        x = x + 0.5 * (a_out + s_out)
+        new_cache.update(conv=new_conv, ssd=new_ssd)
+    else:
+        x = x + _dec_attn(_norm(x, lp["ln1"], cfg))
+
+    if cfg.cross_attention:
+        x = x + cross_attention(_norm(x, lp["ln3"], cfg), lp["xattn"], cfg,
+                                cache_l["enc_out"])
+        new_cache["enc_out"] = cache_l["enc_out"]
+
+    if kind == "moe":
+        m_out, _ = moe_ffn(_norm(x, lp["ln2"], cfg), lp["moe"], cfg)
+        x = x + m_out
+    elif cfg.d_ff:
+        x = x + mlp(_norm(x, lp["ln2"], cfg), lp["mlp"], cfg.mlp_type)
+    return x, new_cache

@@ -1,0 +1,87 @@
+"""Shared neural layers: norms, RoPE / M-RoPE, MLPs.
+
+Functional style: params are dicts of jnp arrays; every function is pure.
+Compute is bf16 with f32 norm/softmax accumulation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+              eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm(x, p: dict, kind: str, eps: float):
+    if kind == "layernorm":
+        return layernorm(x, p["scale"], p["bias"], eps)
+    return rmsnorm(x, p["scale"], eps)
+
+
+# --------------------------------------------------------------- RoPE -------
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Half-split RoPE.  x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), dtype=jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * freqs       # [..., S, D/2]
+    cos = jnp.cos(ang)[..., None, :]                              # [..., S, 1, D/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_m_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+                 sections=(2, 1, 1)) -> jnp.ndarray:
+    """Qwen2-VL M-RoPE: head_dim split into (t, h, w) sections.
+
+    x: [..., S, H, D]; positions: [..., S, 3] (temporal, height, width ids —
+    text tokens use (t, t, t)).  ``sections`` are relative half-dim weights
+    (2:1:1 over D/2 frequency slots, matching Qwen2-VL's 16/24/24 split shape).
+    """
+    d = x.shape[-1]
+    half = d // 2
+    w = np.asarray(sections, dtype=np.float64)
+    sizes = np.floor(half * w / w.sum()).astype(int)
+    sizes[0] += half - sizes.sum()
+    freqs = jnp.asarray(rope_freqs(d, theta), dtype=jnp.float32)  # [D/2]
+    # per-frequency-slot position component: slot i uses section s(i)
+    sec_of_slot = np.repeat(np.arange(3), sizes)                  # [D/2]
+    pos = positions.astype(jnp.float32)                          # [..., S, 3]
+    pos_per_slot = jnp.take(pos, jnp.asarray(sec_of_slot), axis=-1)  # [..., S, D/2]
+    ang = pos_per_slot * freqs
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- MLP -------
+def mlp(x: jnp.ndarray, p: dict, mlp_type: str) -> jnp.ndarray:
+    if mlp_type == "swiglu":
+        gate = jnp.einsum("...d,df->...f", x, p["w1"])
+        up = jnp.einsum("...d,df->...f", x, p["w3"])
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    else:  # gelu
+        h = jnp.einsum("...d,df->...f", x, p["w1"])
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, p["w2"])

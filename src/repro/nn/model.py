@@ -1,0 +1,519 @@
+"""Unified LM: parameter specs/init + train / prefill / decode forwards.
+
+One implementation covers all 10 assigned architectures; family differences
+(MoE, SSD, hybrid, enc-dec, modality stubs) are dispatched via ArchConfig.
+Layers are scanned (stacked [L, ...] parameter leaves) to keep HLO size
+bounded for 64-80-layer configs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .blocks import block_forward, block_decode, encoder_block, cross_block
+from .config import ArchConfig
+from .layers import norm
+from .moe import moe_param_shapes
+from .ssm import ssm_param_shapes, ssm_decode_state_shapes
+
+PyTree = Any
+
+
+# ==================================================================== shapes =
+def _norm_shapes(cfg: ArchConfig) -> dict:
+    if cfg.norm_type == "layernorm":
+        return {"scale": (cfg.d_model,), "bias": (cfg.d_model,)}
+    return {"scale": (cfg.d_model,)}
+
+
+def _attn_shapes(cfg: ArchConfig) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    s = {
+        "wq": (d, cfg.n_heads * hd),
+        "wk": (d, cfg.n_kv_heads * hd),
+        "wv": (d, cfg.n_kv_heads * hd),
+        "wo": (cfg.n_heads * hd, d),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = (hd,)
+        s["k_norm"] = (hd,)
+    return s
+
+
+def _mlp_shapes(cfg: ArchConfig, d_ff: int | None = None) -> dict:
+    ff = d_ff or cfg.d_ff
+    if cfg.mlp_type == "swiglu":
+        return {"w1": (cfg.d_model, ff), "w3": (cfg.d_model, ff),
+                "w2": (ff, cfg.d_model)}
+    return {"w1": (cfg.d_model, ff), "w2": (ff, cfg.d_model)}
+
+
+def _layer_shapes(cfg: ArchConfig, kind: str | None = None) -> dict:
+    kind = kind or cfg.block_kind
+    s: dict = {"ln1": _norm_shapes(cfg)}
+    if kind == "ssm":
+        s["ssm"] = ssm_param_shapes(cfg)
+    elif kind == "hybrid":
+        s["attn"] = _attn_shapes(cfg)
+        s["ssm"] = ssm_param_shapes(cfg)
+    else:
+        s["attn"] = _attn_shapes(cfg)
+    if kind == "moe":
+        s["moe"] = moe_param_shapes(cfg)
+        s["ln2"] = _norm_shapes(cfg)
+    elif cfg.d_ff:
+        s["mlp"] = _mlp_shapes(cfg)
+        s["ln2"] = _norm_shapes(cfg)
+    if cfg.cross_attention:
+        s["xattn"] = _attn_shapes(cfg)
+        s["ln3"] = _norm_shapes(cfg)
+    return s
+
+
+def param_shapes(cfg: ArchConfig) -> PyTree:
+    """Nested dict of parameter shapes (tuples); layers stacked on axis 0."""
+    def stack(shapes: dict, n: int) -> dict:
+        return jax.tree.map(lambda sh: (n,) + sh, shapes,
+                            is_leaf=lambda x: isinstance(x, tuple))
+
+    shapes: dict = {"embed": (cfg.vocab_size, cfg.d_model),
+                    "final_norm": _norm_shapes(cfg)}
+    if not cfg.tie_embeddings:
+        shapes["lm_head"] = (cfg.d_model, cfg.vocab_size)
+
+    n_scanned = cfg.n_layers - cfg.first_dense_layers
+    shapes["layers"] = stack(_layer_shapes(cfg), n_scanned)
+    if cfg.first_dense_layers:
+        dense = {"ln1": _norm_shapes(cfg), "attn": _attn_shapes(cfg),
+                 "ln2": _norm_shapes(cfg), "mlp": _mlp_shapes(cfg)}
+        shapes["dense_layers"] = stack(dense, cfg.first_dense_layers)
+    if cfg.encoder_layers:
+        enc = {"ln1": _norm_shapes(cfg), "attn": _attn_shapes(cfg),
+               "ln2": _norm_shapes(cfg), "mlp": _mlp_shapes(cfg)}
+        shapes["encoder"] = stack(enc, cfg.encoder_layers)
+        shapes["enc_final_norm"] = _norm_shapes(cfg)
+    if cfg.frontend:
+        shapes["frontend_proj"] = (cfg.d_model, cfg.d_model)
+    return shapes
+
+
+def param_dtype(path: tuple, cfg: ArchConfig) -> jnp.dtype:
+    """bf16 weights; f32 for norms and SSM dynamics scalars."""
+    name = path[-1] if path else ""
+    if name in ("scale", "bias", "A_log", "D", "dt_bias", "norm",
+                "q_norm", "k_norm"):
+        return jnp.float32
+    return jnp.bfloat16
+
+
+def _tree_with_paths(shapes: PyTree):
+    flat, treedef = jax.tree.flatten_with_path(
+        shapes, is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(i, int) for i in x))
+    return flat, treedef
+
+
+def abstract_params(cfg: ArchConfig) -> PyTree:
+    """ShapeDtypeStruct pytree — used by the dry-run (no allocation)."""
+    shapes = param_shapes(cfg)
+    flat, treedef = _tree_with_paths(shapes)
+    leaves = [jax.ShapeDtypeStruct(sh, param_dtype(_names(p), cfg))
+              for p, sh in flat]
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def _names(path) -> tuple:
+    out = []
+    for k in path:
+        out.append(getattr(k, "key", getattr(k, "idx", str(k))))
+    return tuple(out)
+
+
+def init_params(cfg: ArchConfig, seed: int = 0) -> PyTree:
+    """Real random init (smoke tests / small-scale training)."""
+    shapes = param_shapes(cfg)
+    flat, treedef = _tree_with_paths(shapes)
+    rng = jax.random.PRNGKey(seed)
+    keys = jax.random.split(rng, len(flat))
+    leaves = []
+    for (path, sh), k in zip(flat, keys):
+        names = _names(path)
+        dt = param_dtype(names, cfg)
+        name = names[-1]
+        if name in ("scale", "norm", "q_norm", "k_norm"):
+            leaves.append(jnp.ones(sh, dt))
+        elif name in ("bias", "conv_b", "dt_bias"):
+            leaves.append(jnp.zeros(sh, dt))
+        elif name == "A_log":
+            leaves.append(jnp.log(jnp.linspace(1.0, 16.0, sh[-1]))
+                          * jnp.ones(sh, dt))
+        elif name == "D":
+            leaves.append(jnp.ones(sh, dt))
+        else:
+            fan_in = sh[-2] if len(sh) >= 2 else sh[-1]
+            leaves.append((jax.random.normal(k, sh, jnp.float32)
+                           / np.sqrt(fan_in)).astype(dt))
+    return jax.tree.unflatten(treedef, leaves)
+
+
+# ==================================================================== fwd ====
+def _embed(params, cfg: ArchConfig, tokens):
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def _unembed(params, cfg: ArchConfig, x):
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+
+
+def _run_encoder(params, cfg: ArchConfig, frames):
+    """Modality stub: precomputed frame embeddings -> encoder stack."""
+    x = jnp.einsum("bsd,de->bse", frames.astype(jnp.bfloat16),
+                   params["frontend_proj"])
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+    def body(h, lp):
+        return encoder_block(h, lp, cfg, positions), ()
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return norm(x, params["enc_final_norm"], cfg.norm_type, cfg.norm_eps)
+
+
+def _constrain_residual(x):
+    """Apply the ambient sequence-sharding constraint (Megatron-SP), if any."""
+    from repro.parallel import context as pctx
+    ctx = pctx.current()
+    if ctx is None:
+        return x
+    ns = ctx.residual_sharding(x.shape[0], x.shape[1])
+    if ns is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, ns)
+
+
+def _index_layer(tree, i):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def _run_layers_full(params, cfg: ArchConfig, x, positions, enc_out=None,
+                     remat: bool = True, collect_kv: bool = False,
+                     unroll: bool = False):
+    """Scan all decoder layers over a full sequence.
+
+    ``unroll=True`` replaces the scan with a Python loop — used by the
+    dry-run's flops calibration (XLA cost_analysis counts while bodies once).
+    """
+    aux_total = jnp.zeros((), jnp.float32)
+    x = _constrain_residual(x)
+
+    if cfg.first_dense_layers:
+        dense_cfg = _dense_view(cfg)
+
+        def dbody(carry, lp):
+            h, aux = carry
+            h, a, _ = block_forward(h, lp, dense_cfg, positions)
+            return (_constrain_residual(h), aux + a), ()
+        if unroll:
+            for i in range(cfg.first_dense_layers):
+                (x, aux_total), _ = dbody((x, aux_total),
+                                          _index_layer(params["dense_layers"], i))
+        else:
+            (x, aux_total), _ = jax.lax.scan(dbody, (x, aux_total),
+                                             params["dense_layers"])
+
+    if cfg.cross_attention:
+        def cbody(carry, lp):
+            h, aux = carry
+            h, kv = cross_block(h, lp, cfg, positions, enc_out)
+            cache_el = {"k": kv[0], "v": kv[1]} if collect_kv else ()
+            return (_constrain_residual(h), aux), cache_el
+        body = cbody
+    else:
+        def abody(carry, lp):
+            h, aux = carry
+            h, a, cache_el = block_forward(h, lp, cfg, positions,
+                                           collect_cache=collect_kv)
+            return (_constrain_residual(h), aux + a), \
+                (cache_el if collect_kv else ())
+        body = abody
+
+    if remat:
+        body = jax.checkpoint(body)
+    if unroll:
+        n = jax.tree.leaves(params["layers"])[0].shape[0]
+        outs = []
+        for i in range(n):
+            (x, aux_total), o = body((x, aux_total),
+                                     _index_layer(params["layers"], i))
+            outs.append(o)
+        kvs = (jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+               if collect_kv else ())
+        return x, aux_total, kvs
+    (x, aux_total), kvs = jax.lax.scan(body, (x, aux_total), params["layers"])
+    return x, aux_total, kvs
+
+
+def _dense_view(cfg: ArchConfig) -> ArchConfig:
+    import dataclasses
+    return dataclasses.replace(cfg, n_experts=0, n_experts_active=0)
+
+
+def forward_logits(params, cfg: ArchConfig, tokens=None, embeds=None,
+                   positions=None, enc_frames=None, remat: bool = True,
+                   unroll: bool = False):
+    """Full-sequence forward -> logits [B, S, V].
+
+    ``embeds`` (precomputed modality embeddings) replaces token lookup for
+    [vlm]; ``enc_frames`` feeds the encoder for [audio]; ``positions`` is
+    [B, S] (or [B, S, 3] for M-RoPE).
+    """
+    if embeds is not None:
+        x = jnp.einsum("bsd,de->bse", embeds.astype(jnp.bfloat16),
+                       params["frontend_proj"]) if cfg.frontend else embeds
+    else:
+        x = _embed(params, cfg, tokens)
+    B, S = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        if cfg.m_rope:
+            positions = jnp.broadcast_to(positions[..., None], (B, S, 3))
+    enc_out = _run_encoder(params, cfg, enc_frames) if cfg.encoder_layers else None
+    x, aux, _ = _run_layers_full(params, cfg, x, positions, enc_out, remat,
+                                 unroll=unroll)
+    x = norm(x, params["final_norm"], cfg.norm_type, cfg.norm_eps)
+    return _unembed(params, cfg, x), aux
+
+
+def forward_hidden(params, cfg: ArchConfig, tokens=None, embeds=None,
+                   positions=None, enc_frames=None, remat: bool = True,
+                   unroll: bool = False):
+    """Full-sequence forward up to the final norm -> ([B, S, d], aux)."""
+    if embeds is not None:
+        x = jnp.einsum("bsd,de->bse", embeds.astype(jnp.bfloat16),
+                       params["frontend_proj"]) if cfg.frontend else embeds
+    else:
+        x = _embed(params, cfg, tokens)
+    B, S = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        if cfg.m_rope:
+            positions = jnp.broadcast_to(positions[..., None], (B, S, 3))
+    enc_out = _run_encoder(params, cfg, enc_frames) if cfg.encoder_layers else None
+    x, aux, _ = _run_layers_full(params, cfg, x, positions, enc_out, remat,
+                                 unroll=unroll)
+    return norm(x, params["final_norm"], cfg.norm_type, cfg.norm_eps), aux
+
+
+def _chunked_xent(params, cfg: ArchConfig, x, targets, mask,
+                  chunk: int = 512, unroll: bool = False):
+    """Cross-entropy without materializing [B, S, V] logits.
+
+    Scans over sequence chunks; each chunk's logits are recomputed in the
+    backward pass (jax.checkpoint), so live logits memory is
+    B * chunk * V_shard instead of B * S * V_shard.
+    """
+    B, S, d = x.shape
+    if S % chunk or S <= chunk:
+        lse_tgt = _xent_block(params, cfg, x, targets, mask)
+        return lse_tgt / jnp.maximum(mask.sum(), 1)
+    nc = S // chunk
+    xs = (x.reshape(B, nc, chunk, d).swapaxes(0, 1),
+          targets.reshape(B, nc, chunk).swapaxes(0, 1),
+          mask.reshape(B, nc, chunk).swapaxes(0, 1))
+
+    @jax.checkpoint
+    def body(tot, inp):
+        xc, tc, mc = inp
+        return tot + _xent_block(params, cfg, xc, tc, mc), ()
+
+    if unroll:
+        tot = jnp.zeros((), jnp.float32)
+        for i in range(nc):
+            tot, _ = body(tot, (xs[0][i], xs[1][i], xs[2][i]))
+    else:
+        tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), xs)
+    return tot / jnp.maximum(mask.sum(), 1)
+
+
+def _xent_block(params, cfg, xc, tc, mc):
+    lf = _unembed(params, cfg, xc).astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    tgt = jnp.take_along_axis(lf, tc[..., None], axis=-1)[..., 0]
+    return jnp.sum((lse - tgt) * mc)
+
+
+def lm_loss(params, cfg: ArchConfig, batch: dict, remat: bool = True,
+            aux_weight: float = 0.01, unroll: bool = False,
+            loss_chunk: int = 512):
+    """Next-token cross-entropy (+ MoE load-balance aux), chunked over S."""
+    x, aux = forward_hidden(
+        params, cfg,
+        tokens=batch.get("tokens"),
+        embeds=batch.get("embeds"),
+        positions=batch.get("positions"),
+        enc_frames=batch.get("frames"),
+        remat=remat, unroll=unroll)
+    B, S, _ = x.shape
+    if "targets" in batch:
+        targets = batch["targets"]
+        mask = jnp.ones((B, S), jnp.float32)
+    else:
+        tokens = batch["tokens"]
+        targets = jnp.concatenate([tokens[:, 1:],
+                                   jnp.zeros((B, 1), tokens.dtype)], axis=1)
+        mask = jnp.concatenate([jnp.ones((B, S - 1), jnp.float32),
+                                jnp.zeros((B, 1), jnp.float32)], axis=1)
+    nll = _chunked_xent(params, cfg, x, targets, mask, chunk=loss_chunk,
+                        unroll=unroll)
+    return nll + aux_weight * aux, {"nll": nll, "aux": aux}
+
+
+# ================================================================= decode ====
+def cache_shapes(cfg: ArchConfig, batch: int, max_seq: int) -> PyTree:
+    """Shapes of the per-layer decode cache (stacked [L, ...])."""
+    kind = cfg.block_kind
+    n_scanned = cfg.n_layers - cfg.first_dense_layers
+    per: dict = {}
+    if kind in ("attn", "moe", "hybrid"):
+        per["k"] = (batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+        per["v"] = (batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+        if cfg.kv_quant:
+            per["k_scale"] = (batch, max_seq, cfg.n_kv_heads)
+            per["v_scale"] = (batch, max_seq, cfg.n_kv_heads)
+    if kind in ("ssm", "hybrid"):
+        per.update(ssm_decode_state_shapes(cfg, batch))
+    if cfg.cross_attention:
+        per["enc_out"] = (batch, cfg.encoder_seq, cfg.d_model)
+    shapes = {"layers": {k: (n_scanned,) + v for k, v in per.items()}}
+    if cfg.first_dense_layers:
+        shapes["dense_layers"] = {
+            "k": (cfg.first_dense_layers, batch, max_seq, cfg.n_kv_heads,
+                  cfg.head_dim),
+            "v": (cfg.first_dense_layers, batch, max_seq, cfg.n_kv_heads,
+                  cfg.head_dim)}
+    return shapes
+
+
+def cache_dtype(name: str, cfg: ArchConfig | None = None) -> jnp.dtype:
+    if name in ("conv", "ssd"):
+        return jnp.float32
+    if name.endswith("_scale"):
+        return jnp.float32
+    if cfg is not None and cfg.kv_quant and name in ("k", "v"):
+        return jnp.int8
+    return jnp.bfloat16
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_seq: int) -> PyTree:
+    shapes = cache_shapes(cfg, batch, max_seq)
+    return jax.tree.map_with_path(
+        lambda p, sh: jax.ShapeDtypeStruct(sh, cache_dtype(_names(p)[-1], cfg)),
+        shapes, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int) -> PyTree:
+    shapes = cache_shapes(cfg, batch, max_seq)
+    return jax.tree.map_with_path(
+        lambda p, sh: jnp.zeros(sh, cache_dtype(_names(p)[-1], cfg)),
+        shapes, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def decode_step(params, cfg: ArchConfig, cache: PyTree, token, pos,
+                unroll: bool = False):
+    """One-token decode.  token: [B] int32; pos: scalar int32.
+
+    Returns (logits [B, V], new_cache).
+    """
+    x = _embed(params, cfg, token[:, None])
+
+    if cfg.first_dense_layers:
+        dense_cfg = _dense_view(cfg)
+
+        def dbody(h, inp):
+            lp, cl = inp
+            h, ncl = block_decode(h, lp, dense_cfg, cl, pos)
+            return h, ncl
+        x, new_dense = jax.lax.scan(dbody, x,
+                                    (params["dense_layers"],
+                                     cache["dense_layers"]))
+
+    # The stacked cache is threaded through the scan CARRY and updated with
+    # dynamic_update_index_in_dim: XLA keeps one donated buffer in the while
+    # loop, where emitting the cache as scan ys would double-buffer it
+    # (2x KV memory at 32k-500k context).
+    static = ("enc_out",)
+
+    def body(carry, inp):
+        h, layer_cache = carry
+        lp, i = inp
+        cl = jax.tree.map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, i, 0, keepdims=False),
+            layer_cache)
+        h, ncl = block_decode(h, lp, cfg, cl, pos)
+        layer_cache = jax.tree_util.tree_map_with_path(
+            lambda p_, c, n_: c if str(getattr(p_[-1], "key", "")) in static
+            else jax.lax.dynamic_update_index_in_dim(
+                c, n_.astype(c.dtype), i, 0),
+            layer_cache, ncl)
+        return (h, layer_cache), ()
+
+    n = jax.tree.leaves(params["layers"])[0].shape[0]
+    if unroll:
+        carry = (x, cache["layers"])
+        for i in range(n):
+            carry, _ = body(carry, (_index_layer(params["layers"], i),
+                                    jnp.asarray(i)))
+        x, new_layer_cache = carry
+    else:
+        (x, new_layer_cache), _ = jax.lax.scan(
+            body, (x, cache["layers"]), (params["layers"], jnp.arange(n)))
+    x = norm(x, params["final_norm"], cfg.norm_type, cfg.norm_eps)
+    logits = _unembed(params, cfg, x)[:, 0]
+    new_cache = {"layers": new_layer_cache}
+    if cfg.first_dense_layers:
+        new_cache["dense_layers"] = new_dense
+    return logits, new_cache
+
+
+def prefill(params, cfg: ArchConfig, tokens=None, embeds=None,
+            enc_frames=None, max_seq: int | None = None,
+            unroll: bool = False):
+    """Run the prompt, build the decode cache.  Returns (last_logits, cache).
+
+    Works for every family: attention archs emit packed K/V (padded to
+    ``max_seq``); SSM/hybrid archs additionally emit the final conv/SSD
+    states from the chunked scan.
+    """
+    if cfg.frontend and embeds is not None:
+        x = jnp.einsum("bsd,de->bse", embeds.astype(jnp.bfloat16),
+                       params["frontend_proj"])
+    else:
+        x = _embed(params, cfg, tokens) if tokens is not None else embeds
+    B, S = x.shape[:2]
+    max_seq = max_seq or S
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    if cfg.m_rope:
+        positions = jnp.broadcast_to(positions[..., None], (B, S, 3))
+    enc_out = _run_encoder(params, cfg, enc_frames) if cfg.encoder_layers else None
+    x, _, cache_els = _run_layers_full(params, cfg, x, positions, enc_out,
+                                       remat=False, collect_kv=True,
+                                       unroll=unroll)
+    x = norm(x, params["final_norm"], cfg.norm_type, cfg.norm_eps)
+    logits = _unembed(params, cfg, x[:, -1:])[:, 0]
+    pad = max_seq - S
+    cache_layers = dict(cache_els)
+    for name in ("k", "v"):
+        if name in cache_layers:
+            cache_layers[name] = jnp.pad(
+                cache_layers[name],
+                ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    if cfg.cross_attention:
+        n_scanned = cfg.n_layers - cfg.first_dense_layers
+        cache_layers["enc_out"] = jnp.broadcast_to(
+            enc_out[None], (n_scanned,) + enc_out.shape)
+    return logits, {"layers": cache_layers}

@@ -1,0 +1,198 @@
+"""Mixture-of-experts layer: top-k router + capacity-buffer dispatch.
+
+Dispatch is sort-based (argsort by expert, scatter into an [E, C, d] capacity
+buffer, batched expert matmuls, gather-combine) — static shapes throughout,
+so it lowers cleanly under pjit with the expert dimension sharded over the
+"model" axis (expert parallelism).  Tokens over capacity are dropped, as in
+GShard/Switch.
+
+This dense-dispatch formulation is the *baseline* the paper's model critiques:
+the scatter/gather lower to all-gathers whose message pattern the queue-search
+term punishes; the shard_map all-to-all variant in
+:mod:`repro.parallel.ep_a2a` is the optimized path (hillclimb cell).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+
+
+def moe_param_shapes(cfg: ArchConfig) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    shapes = {
+        "router": (d, e),
+        "w1": (e, d, f),    # gate
+        "w3": (e, d, f),    # up
+        "w2": (e, f, d),    # down
+    }
+    if cfg.n_shared_experts:
+        sf = cfg.n_shared_experts * f
+        shapes.update({"shared_w1": (d, sf), "shared_w3": (d, sf),
+                       "shared_w2": (sf, d)})
+    return shapes
+
+
+def capacity(n_tokens: int, cfg: ArchConfig) -> int:
+    c = int(n_tokens * cfg.n_experts_active * cfg.capacity_factor
+            // cfg.n_experts) + 1
+    # round to a lane-friendly multiple
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def _dp_groups(b: int) -> tuple[int, object]:
+    """Number of data shards D dividing the batch, and the dp spec (or None).
+
+    Routing/dispatch is *batched over data shards* so every scatter/gather
+    carries a leading D dim sharded over the dp axes — GSPMD partitions
+    batched scatters cleanly, where a single global [E, C, d] scatter would
+    be replicated per device (hundreds of GiB at production shapes).
+    """
+    from repro.parallel import context as pctx
+    ctx = pctx.current()
+    if ctx is None:
+        return 1, None
+    D = 1
+    axes = []
+    rem = b
+    for a in ctx.dp_axes:
+        s = ctx.mesh.shape[a]
+        if rem % s == 0 and rem >= s:
+            D *= s
+            axes.append(a)
+            rem //= s
+        else:
+            break
+    if not axes:
+        return 1, None
+    return D, (tuple(axes) if len(axes) > 1 else axes[0])
+
+
+MOE_CHUNK_TOKENS = 16384   # cap per-shard tokens processed at once
+
+
+def moe_ffn(x, p, cfg: ArchConfig):
+    """x: [b, s, d] -> ([b, s, d], aux_loss).
+
+    Dispatch is batched per data shard; when a shard holds more than
+    ``MOE_CHUNK_TOKENS`` tokens (32k prefill, unmicrobatched train), the
+    shard's tokens are processed in sequential chunks via lax.scan so the
+    gather/sort transients stay bounded (~chunk x K x d per device) instead
+    of scaling with the full sequence.
+    """
+    b, s, d = x.shape
+    D, dp_spec = _dp_groups(b)
+    T = (b * s) // D                                          # tokens per shard
+    if T > MOE_CHUNK_TOKENS and T % MOE_CHUNK_TOKENS == 0:
+        sub = T // MOE_CHUNK_TOKENS
+        xr = x.reshape(D, sub, MOE_CHUNK_TOKENS, d).swapaxes(0, 1)
+        # pin the chunked view's layout: x arrives sequence-sharded (SP) and
+        # without the constraint GSPMD replicates the whole reshape per chunk
+        xr = _constrain(xr, (None, dp_spec, None, None))
+
+        def body(aux_acc, xc):
+            yc, aux = _moe_groups(xc, p, cfg, dp_spec)
+            return aux_acc + aux / sub, _constrain(yc, (dp_spec, None, None))
+
+        aux, ys = jax.lax.scan(body, jnp.zeros((), jnp.float32), xr)
+        y = ys.swapaxes(0, 1).reshape(b, s, d)
+        return y, aux
+    y, aux = _moe_groups(x.reshape(D, T, d), p, cfg, dp_spec)
+    return y.reshape(b, s, d), aux
+
+
+def _constrain(t, parts):
+    from repro.parallel import context as pctx
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    ctx = pctx.current()
+    if ctx is None:
+        return t
+    return jax.lax.with_sharding_constraint(
+        t, NamedSharding(ctx.mesh, P(*parts)))
+
+
+def _moe_groups(xf, p, cfg: ArchConfig, dp_spec):
+    """Routed-expert forward for [D, T, d] token groups (D over dp axes)."""
+    D, T, d = xf.shape
+    E, K = cfg.n_experts, cfg.n_experts_active
+
+    dtype = xf.dtype
+    logits = jnp.einsum("gtd,de->gte", xf.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, K)                  # [D, T, K]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balance auxiliary loss (Switch): E * sum_e f_e * P_e  (global)
+    gi = jnp.broadcast_to(jnp.arange(D)[:, None], (D, T * K))
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.zeros(E).at[idx.reshape(-1)].add(1.0) / (D * T * K)
+    aux = E * jnp.sum(me * ce)
+
+    # ---- per-shard sort + GATHER dispatch -----------------------------------
+    # Everything indexing the [E, C] capacity grid is a batched gather with
+    # indices into the expert-sorted token list; scatters only touch
+    # dp-batch-sharded targets ([D, E] counts, [D, T, d] combine), which
+    # GSPMD partitions locally.  Scattering into the E-sharded buffer
+    # directly would be replicated per device (hundreds of GiB).
+    C = capacity(T, cfg)
+    eflat = idx.reshape(D, T * K)
+    gflat = gate_vals.reshape(D, T * K)
+    order = jnp.argsort(eflat, axis=-1)                       # [D, T*K]
+    e_sorted = jnp.take_along_axis(eflat, order, axis=-1)
+    tok_sorted = order // K
+    counts = jnp.zeros((D, E), dtype=jnp.int32).at[gi, eflat].add(1)
+    offsets = jnp.cumsum(counts, axis=-1) - counts
+    rank = (jnp.arange(T * K)[None, :]
+            - jnp.take_along_axis(offsets, e_sorted, axis=-1))
+    keep = rank < C
+
+    # slot (e, c) holds the c-th entry of expert e in the sorted list
+    gidx = offsets[:, :, None] + jnp.arange(C)[None, None, :]   # [D, E, C]
+    in_use = gidx < (offsets + jnp.minimum(counts, C))[:, :, None]
+    gclip = jnp.clip(gidx, 0, T * K - 1).reshape(D, E * C)
+    xs = jnp.take_along_axis(xf, tok_sorted[..., None], axis=1)  # sorted toks
+    buf = jnp.take_along_axis(xs, gclip[..., None], axis=1)
+    buf = jnp.where(in_use.reshape(D, E * C)[..., None], buf, 0)
+    buf = buf.reshape(D, E, C, d)
+    buf = _constrain_moe_buf(buf, dp_spec)
+
+    # ---- batched expert SwiGLU ---------------------------------------------
+    gate = jnp.einsum("gecd,edf->gecf", buf, p["w1"])
+    up = jnp.einsum("gecd,edf->gecf", buf, p["w3"])
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(dtype) * up
+    out_buf = jnp.einsum("gecf,efd->gecd", h, p["w2"])
+
+    # ---- combine: gather each assignment's slot, unsort, weighted sum ------
+    flat_slot = jnp.clip(e_sorted * C + rank, 0, E * C - 1)     # [D, T*K]
+    gathered = jnp.take_along_axis(out_buf.reshape(D, E * C, d),
+                                   flat_slot[..., None], axis=1)
+    g_sorted = jnp.take_along_axis(gflat, order, axis=-1)
+    contrib = jnp.where(keep[..., None],
+                        gathered * g_sorted[..., None].astype(dtype), 0)
+    y = jnp.zeros((D, T, d), dtype=dtype)
+    y = y.at[gi, tok_sorted].add(contrib)
+
+    if cfg.n_shared_experts:
+        sg = jnp.einsum("gtd,df->gtf", xf, p["shared_w1"])
+        su = jnp.einsum("gtd,df->gtf", xf, p["shared_w3"])
+        sh = jax.nn.silu(sg.astype(jnp.float32)).astype(dtype) * su
+        y = y + jnp.einsum("gtf,fd->gtd", sh, p["shared_w2"])
+
+    return y, aux
+
+
+def _constrain_moe_buf(buf, dp_spec):
+    """Pin the capacity buffer to (dp, model-on-E) so expert matmuls run
+    expert-parallel instead of GSPMD replicating the scatter output."""
+    from repro.parallel import context as pctx
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    ctx = pctx.current()
+    if ctx is None:
+        return buf
+    E = buf.shape[1]
+    tp = ctx.mesh.shape[ctx.model_axis]
+    e_ax = ctx.model_axis if E % tp == 0 else None
+    ns = NamedSharding(ctx.mesh, P(dp_spec, e_ax, None, None))
+    return jax.lax.with_sharding_constraint(buf, ns)

@@ -1,0 +1,182 @@
+"""Mamba2 SSD (state-space duality) mixer — chunked matmul form.
+
+Training/prefill uses the SSD block decomposition (intra-chunk attention-like
+matmuls + inter-chunk recurrent state passing, arXiv:2405.21060 Sec. 5);
+decode is the O(1) recurrent update.  Single B/C group (G=1) as in the
+assigned configs.
+
+The intra-chunk matmuls are the compute hot-spot; :mod:`repro.kernels.ssd`
+provides the Pallas TPU kernel for them, validated against this reference.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import rmsnorm
+
+
+def ssm_param_shapes(cfg: ArchConfig) -> dict:
+    d, di, n, h = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * n
+    return {
+        "in_proj": (d, 2 * di + 2 * n + h),
+        "conv_w": (cfg.ssm_conv_kernel, conv_ch),
+        "conv_b": (conv_ch,),
+        "A_log": (h,),
+        "D": (h,),
+        "dt_bias": (h,),
+        "norm": (di,),
+        "out_proj": (di, d),
+    }
+
+
+def _split_proj(zxbcdt, cfg: ArchConfig):
+    di, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + di + 2 * n]
+    dt = zxbcdt[..., di + di + 2 * n:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b, K: int):
+    """Depthwise causal conv1d, kernel K (stacked-slice form)."""
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    L = xBC.shape[1]
+    out = sum(pad[:, k:k + L, :] * w[k] for k in range(K))
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(xBC.dtype)
+
+
+def ssd_chunked(x, Bm, Cm, dt, A_log, D, chunk: int,
+                return_final_state: bool = False):
+    """SSD scan in chunked matmul form.
+
+    x: [b, l, h, p]; Bm/Cm: [b, l, n]; dt: [b, l, h] (post-softplus).
+    Returns y: [b, l, h, p] (and the final SSD state [b, h, n, p] when
+    ``return_final_state`` — used by prefill to seed decode).
+    """
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    q = min(chunk, l)
+    nc = l // q
+    assert nc * q == l, f"seq {l} not divisible by chunk {q}"
+
+    xr = x.reshape(b, nc, q, h, p)
+    Br = Bm.reshape(b, nc, q, n)
+    Cr = Cm.reshape(b, nc, q, n)
+    dtr = dt.reshape(b, nc, q, h).astype(jnp.float32)
+    a = -jnp.exp(A_log.astype(jnp.float32)) * dtr          # [b,nc,q,h] log-decay
+    cumA = jnp.cumsum(a, axis=2)                            # inclusive
+    dtx = (xr.astype(jnp.float32) * dtr[..., None])         # dt_j * x_j
+
+    # ---- intra-chunk (the Pallas-kernel target) ---------------------------
+    # scores[b,c,h,i,j] = (C_i . B_j) * exp(cumA_i - cumA_j), i >= j.
+    # Mask the *log* decay before exp: the upper triangle has positive
+    # exponents that overflow, and where() after exp leaks NaN into grads.
+    cb = jnp.einsum("bcin,bcjn->bcij", Cr.astype(jnp.float32),
+                    Br.astype(jnp.float32))
+    ln_decay = cumA[:, :, :, None, :] - cumA[:, :, None, :, :]  # [b,c,i,j,h]
+    mask = jnp.tril(jnp.ones((q, q), dtype=bool))
+    ln_decay = jnp.where(mask[None, None, :, :, None], ln_decay, -1e30)
+    scores = cb[..., None] * jnp.exp(ln_decay)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, dtx)
+
+    # ---- chunk summary states --------------------------------------------
+    seg = jnp.exp(cumA[:, :, -1:, :] - cumA)                # [b,c,q,h]
+    S_c = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Br.astype(jnp.float32),
+                     seg, dtx)
+
+    # ---- inter-chunk recurrence -------------------------------------------
+    chunk_decay = jnp.exp(cumA[:, :, -1, :])                # [b,c,h]
+
+    def step(carry, inp):
+        s_in = carry                                        # [b,h,n,p]
+        s_c, dec = inp
+        out = s_in
+        carry = s_in * dec[..., None, None] + s_c
+        return carry, out
+
+    s0 = jnp.zeros((b, h, n, p), dtype=jnp.float32)
+    s_fin, S_in = jax.lax.scan(step, s0,
+                               (jnp.moveaxis(S_c, 1, 0),
+                                jnp.moveaxis(chunk_decay, 1, 0)))
+    S_in = jnp.moveaxis(S_in, 0, 1)                          # [b,nc,h,n,p]
+
+    y_inter = jnp.einsum("bcin,bchnp,bcih->bcihp", Cr.astype(jnp.float32),
+                         S_in, jnp.exp(cumA))
+    y = y_intra + y_inter + D.astype(jnp.float32)[None, None, None, :, None] \
+        * xr.astype(jnp.float32)
+    y = y.reshape(b, l, h, p)
+    if return_final_state:
+        return y, s_fin
+    return y
+
+
+def ssm_mixer(xin, p, cfg: ArchConfig, return_state: bool = False):
+    """Full Mamba2 mixer (training/prefill).  xin: [b, l, d] -> [b, l, d].
+
+    With ``return_state``, also returns (conv_state, ssd_state) ready for
+    decode continuation.
+    """
+    di, n, h, phd = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    K = cfg.ssm_conv_kernel
+    zxbcdt = jnp.einsum("bld,de->ble", xin, p["in_proj"])
+    z, xBC_raw, dt = _split_proj(zxbcdt, cfg)
+    xBC = _causal_conv(xBC_raw, p["conv_w"], p["conv_b"], K)
+    x = xBC[..., :di].reshape(xin.shape[0], xin.shape[1], h, phd)
+    Bm = xBC[..., di:di + n]
+    Cm = xBC[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    res = ssd_chunked(x, Bm, Cm, dt, p["A_log"], p["D"], cfg.ssm_chunk,
+                      return_final_state=return_state)
+    y, s_fin = res if return_state else (res, None)
+    y = y.reshape(xin.shape[0], xin.shape[1], di).astype(xin.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(xin.dtype),
+                p["norm"], cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, p["out_proj"])
+    if return_state:
+        conv_state = xBC_raw[:, -(K - 1):, :].astype(jnp.float32)
+        return out, (conv_state, s_fin)
+    return out
+
+
+# -------------------------------------------------------------- decode ------
+def ssm_decode_state_shapes(cfg: ArchConfig, batch: int) -> dict:
+    di, n = cfg.ssm_d_inner, cfg.ssm_state
+    return {
+        "conv": (batch, cfg.ssm_conv_kernel - 1, di + 2 * n),
+        "ssd": (batch, cfg.ssm_heads, n, cfg.ssm_head_dim),
+    }
+
+
+def ssm_decode(xin, p, cfg: ArchConfig, conv_state, ssd_state):
+    """One-token recurrent update.  xin: [b, 1, d].
+
+    Returns (y [b,1,d], new_conv_state, new_ssd_state).
+    """
+    b = xin.shape[0]
+    di, n, h, phd = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    K = cfg.ssm_conv_kernel
+    zxbcdt = jnp.einsum("bld,de->ble", xin, p["in_proj"])
+    z, xBC, dt = _split_proj(zxbcdt, cfg)
+    # rolling conv buffer: [b, K-1, C] + current input
+    window = jnp.concatenate([conv_state, xBC], axis=1)       # [b, K, C]
+    new_conv = window[:, 1:, :]
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(xin.dtype)
+    x = conv_out[:, :di].reshape(b, h, phd)
+    Bm = conv_out[:, di:di + n]
+    Cm = conv_out[:, di + n:]
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))  # [b,h]
+    a = jnp.exp(-jnp.exp(p["A_log"].astype(jnp.float32)) * dtv)  # [b,h]
+    dtx = x.astype(jnp.float32) * dtv[..., None]               # [b,h,p]
+    new_ssd = ssd_state * a[..., None, None] \
+        + jnp.einsum("bn,bhp->bhnp", Bm.astype(jnp.float32), dtx)
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(jnp.float32), new_ssd) \
+        + p["D"].astype(jnp.float32)[None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(b, 1, di).astype(xin.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(xin.dtype),
+                p["norm"], cfg.norm_eps)
+    return jnp.einsum("ble,ed->bld", y, p["out_proj"]), new_conv, new_ssd

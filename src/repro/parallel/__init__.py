@@ -1,0 +1,7 @@
+"""Distribution runtime: sharding rules, gradient compression, pipeline,
+model-driven layout autotuning."""
+from .sharding import (MeshPlan, make_mesh_plan, param_pspecs, batch_pspecs,
+                       cache_pspecs, shardings)
+
+__all__ = ["MeshPlan", "make_mesh_plan", "param_pspecs", "batch_pspecs",
+           "cache_pspecs", "shardings"]

@@ -1,0 +1,80 @@
+"""Model-driven layout autotuning — the paper's model as a decision procedure.
+
+For a given (arch x shape), enumerate candidate layouts (mesh factorization,
+sequence sharding, attention chunk, FSDP), lower + compile each, decompose
+the compiled collectives to p2p messages, and rank by the node-aware
+max-rate + queue + contention step time (plus the compute/memory roofline
+terms so communication wins don't get chosen when they blow the other
+budgets).
+
+This mirrors the paper's conclusions loop: the model tells you WHETHER a
+schedule is message-count-bound (queue), link-share-bound (contention) or
+bandwidth-bound, and the tuner picks the layout that moves the dominant
+term.  Run through ``launch/autotune.py`` (needs the 512-device dry-run env).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import parse_collectives, price_step
+from repro.core.decompose import PodGeometry
+from repro.core.params import (tpu_v5e, V5E_PEAK_FLOPS_BF16, V5E_HBM_BW)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutCandidate:
+    name: str
+    mesh_shape: tuple[int, ...]       # (data, model) or (pod, data, model)
+    seq_shard: bool = True
+    q_chunk: int = 1024
+    fsdp: bool | None = None          # None = dryrun default rule
+
+
+@dataclasses.dataclass
+class LayoutScore:
+    candidate: LayoutCandidate
+    compute_s: float
+    memory_s: float
+    comm_naive_s: float
+    comm_model_s: float
+    queue_s: float
+    contention_s: float
+    peak_gib: float
+    fits: bool
+
+    @property
+    def step_model_s(self) -> float:
+        """Modeled step time: max(compute, memory) + modeled communication."""
+        return max(self.compute_s, self.memory_s) + self.comm_model_s
+
+
+def score_compiled(compiled, n_layers: int, multi_pod: bool,
+                   flops_per_device: float | None = None,
+                   bytes_per_device: float | None = None) -> dict:
+    """Roofline + Bienz terms from a compiled executable."""
+    cost = compiled.cost_analysis()
+    ma = compiled.memory_analysis()
+    flops = flops_per_device if flops_per_device is not None \
+        else cost.get("flops", 0.0)
+    byts = bytes_per_device if bytes_per_device is not None \
+        else cost.get("bytes accessed", 0.0)
+    ops = parse_collectives(compiled.as_text(), default_trip_count=n_layers)
+    comm = price_step(ops, PodGeometry(n_pods=2 if multi_pod else 1),
+                      tpu_v5e())
+    peak = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+    return {
+        "compute_s": flops / V5E_PEAK_FLOPS_BF16,
+        "memory_s": byts / V5E_HBM_BW,
+        "comm_naive_s": comm.naive_time,
+        "comm_model_s": comm.model_time,
+        "queue_s": comm.queue,
+        "contention_s": comm.contention,
+        "peak_gib": peak / 2**30,
+        "fits": peak < 15.5 * 2**30,
+    }
+
+
+def rank(scores: list[LayoutScore]) -> list[LayoutScore]:
+    """Feasible layouts first, by modeled step time."""
+    return sorted(scores, key=lambda s: (not s.fits, s.step_model_s))

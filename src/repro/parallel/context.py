@@ -1,0 +1,72 @@
+"""Ambient sharding context for model-internal layout constraints.
+
+The model code is mesh-agnostic; when a ShardingContext is active (the
+launcher/dry-run sets it), blocks apply ``with_sharding_constraint`` at
+layer boundaries:
+
+* residual stream [B, S, d] -> P(dp, "model", None)  (Megatron-style sequence
+  sharding: XLA then lowers TP all-reduces into reduce-scatter/all-gather
+  pairs and per-device activation memory drops by the TP degree);
+* q-chunked attention bound (keeps S^2 score blocks off HBM).
+
+This is the *production default*; the §Perf baselines toggle these off to
+quantify their effect.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingContext:
+    mesh: Mesh
+    dp_axes: tuple[str, ...]
+    model_axis: str = "model"
+    seq_shard: bool = True          # sequence-shard residual stream
+    q_chunk: int = 1024             # query-chunked attention block size
+    unroll_loops: bool = False      # unroll inner scans (flops calibration)
+
+    def residual_sharding(self, batch: int, seq: int):
+        """NamedSharding for [B, S, d] residuals, or None if not applicable."""
+        if not self.seq_shard:
+            return None
+        tp = self.mesh.shape[self.model_axis]
+        if seq % tp != 0:
+            return None
+        dp = _dp_spec(self.mesh, self.dp_axes, batch)
+        return NamedSharding(self.mesh, P(dp, self.model_axis, None))
+
+
+def _dp_spec(mesh, dp_axes, batch: int):
+    axes = []
+    rem = batch
+    for a in dp_axes:
+        s = mesh.shape[a]
+        if rem % s == 0 and rem >= s:
+            axes.append(a)
+            rem //= s
+        else:
+            break
+    if not axes:
+        return None
+    return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+def current() -> ShardingContext | None:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def use(ctx: ShardingContext | None):
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = ctx
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev

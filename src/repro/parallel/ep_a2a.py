@@ -1,0 +1,103 @@
+"""Expert parallelism with explicit all-to-all (the optimized MoE path).
+
+The baseline MoE (:mod:`repro.nn.moe`) builds a global [E, C, d] capacity
+buffer under pjit; GSPMD lowers the scatter/gather around the
+expert-sharded matmuls into all-gathers whose message pattern the paper's
+queue-search term punishes (many strided transfers).  This module is the
+classic alternative: shard_map over the expert axis with two
+``jax.lax.all_to_all`` exchanges — each chip sends exactly one message per
+peer per direction, the minimal-message-count schedule the paper's model
+favors.
+
+Semantics match moe_ffn with per-device capacity (tokens over device
+capacity are dropped); tests compare against the reference with generous
+capacity so no drops occur.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.nn.config import ArchConfig
+
+
+def _local_dispatch(xf, logits, cfg: ArchConfig, E_total: int, C: int):
+    """Route local tokens into a per-expert capacity buffer [E_total, C, d]."""
+    T, d = xf.shape
+    K = cfg.n_experts_active
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    eflat = idx.reshape(-1)
+    gflat = gate_vals.reshape(-1)
+    order = jnp.argsort(eflat)
+    e_sorted = eflat[order]
+    tok_sorted = order // K
+    counts = jnp.zeros(E_total, dtype=jnp.int32).at[eflat].add(1)
+    offsets = jnp.cumsum(counts) - counts
+    rank = jnp.arange(T * K) - offsets[e_sorted]
+    keep = rank < C
+    se = jnp.where(keep, e_sorted, 0)
+    sc = jnp.where(keep, rank, 0)
+    buf = jnp.zeros((E_total, C, d), dtype=xf.dtype)
+    buf = buf.at[se, sc].add(jnp.where(keep[:, None], xf[tok_sorted], 0)
+                             .astype(xf.dtype))
+    return buf, (se, sc, keep, tok_sorted, gflat, order)
+
+
+def moe_ffn_ep(x, p, cfg: ArchConfig, mesh, axis_name: str = "model"):
+    """MoE layer with explicit expert-parallel all-to-all.
+
+    x: [B, S, d] (replicated over the expert axis); expert weights sharded
+    on their leading E dim over ``axis_name``.  Returns [B, S, d].
+    """
+    M = mesh.shape[axis_name]
+    E = cfg.n_experts
+    assert E % M == 0
+
+    # out is numerically replicated (every rank combines the same expert
+    # outputs after the reverse all-to-all) but the replication is not
+    # statically inferable -> check_vma=False.
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(P(), P(), P(axis_name), P(axis_name), P(axis_name)),
+        out_specs=P(), check_vma=False,
+    )
+    def _run(xl, router, w1, w3, w2):
+        B, S, d = xl.shape
+        T = B * S
+        xf = xl.reshape(T, d)
+        logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                            router.astype(jnp.float32))
+        C = max(8, int(T * cfg.n_experts_active * cfg.capacity_factor // E)
+                + 1)
+        buf, route = _local_dispatch(xf, logits, cfg, E, C)
+        # [E, C, d] -> [M, E_l, C, d] -> a2a -> [E_l, M*C, d]
+        E_l = E // M
+        buf = buf.reshape(M, E_l, C, d)
+        buf = jax.lax.all_to_all(buf, axis_name, split_axis=0, concat_axis=0,
+                                 tiled=False)
+        # leading axis now gathers every peer's slots for MY experts
+        buf = buf.reshape(M, E_l, C, d).transpose(1, 0, 2, 3) \
+                 .reshape(E_l, M * C, d)
+        gate = jnp.einsum("ecd,edf->ecf", buf, w1)
+        up = jnp.einsum("ecd,edf->ecf", buf, w3)
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(buf.dtype) * up
+        out = jnp.einsum("ecf,efd->ecd", h, w2)
+        # reverse a2a: [E_l, M*C, d] -> [M, E_l, C, d] -> [E, C, d] local view
+        out = out.reshape(E_l, M, C, d).transpose(1, 0, 2, 3)
+        out = jax.lax.all_to_all(out, axis_name, split_axis=0, concat_axis=0,
+                                 tiled=False)
+        out = out.reshape(E, C, d)
+        se, sc, keep, tok_sorted, gflat, order = route
+        gathered = out[se, sc]
+        contrib = jnp.where(keep[:, None],
+                            gathered * gflat[order][:, None].astype(xl.dtype),
+                            0)
+        y = jnp.zeros((T, d), dtype=xl.dtype).at[tok_sorted].add(contrib)
+        return y.reshape(B, S, d)
+
+    return _run(x, p["router"], p["w1"], p["w3"], p["w2"])

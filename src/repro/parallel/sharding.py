@@ -1,0 +1,236 @@
+"""Sharding rules: parameter / batch / cache PartitionSpecs per architecture.
+
+Baseline layout (what the dry-run lowers):
+
+* **DP** over ``("pod", "data")`` (or ``("data",)`` single-pod): batch dims.
+* **TP** over ``"model"``: attention head projections, MLP hidden, vocab.
+* **EP** over ``"model"``: MoE expert dimension (experts are co-sharded with
+  TP — the standard "experts replace MLP shards" layout).
+* **SP** over ``"model"`` for decode KV caches: the *sequence* dimension of
+  the cache is sharded (flash-decoding style), so GQA archs with fewer KV
+  heads than the TP degree still scale; XLA inserts the partial-softmax
+  reductions automatically.
+
+Every rule degrades to replication when a dimension is not divisible by the
+axis size (e.g. whisper's 51865 vocab), so all 10 archs lower on the same
+mesh.  These specs are the *baseline* the §Perf hillclimbs improve on.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.nn.config import ArchConfig
+from repro.nn.model import param_shapes, cache_shapes, _names
+
+MODEL_AXIS = "model"
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    mesh: Mesh
+    dp_axes: tuple[str, ...]      # ("pod", "data") or ("data",)
+    model_axis: str = MODEL_AXIS
+
+    @property
+    def dp_size(self) -> int:
+        return int(jax.numpy.prod(
+            jax.numpy.asarray([self.mesh.shape[a] for a in self.dp_axes])))
+
+    @property
+    def model_size(self) -> int:
+        return int(self.mesh.shape[self.model_axis])
+
+    def dp_spec_for(self, batch: int):
+        """Largest prefix of dp axes that divides ``batch`` (1 -> None)."""
+        axes = []
+        rem = batch
+        for a in self.dp_axes:
+            s = self.mesh.shape[a]
+            if rem % s == 0 and rem >= s:
+                axes.append(a)
+                rem //= s
+            else:
+                break
+        if not axes:
+            return None
+        return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+def make_mesh_plan(mesh: Mesh) -> MeshPlan:
+    dp = tuple(a for a in mesh.axis_names if a != MODEL_AXIS)
+    return MeshPlan(mesh=mesh, dp_axes=dp)
+
+
+# ------------------------------------------------------------- params -------
+def _param_rule(names: tuple, shape: tuple, cfg: ArchConfig, tp: int):
+    """PartitionSpec for one parameter leaf (names = path, shape incl. [L])."""
+    name = names[-1]
+    group = names[-2] if len(names) >= 2 else ""
+    nd = len(shape)
+
+    def last_dim_tp():
+        specs = [None] * nd
+        if shape[-1] % tp == 0:
+            specs[-1] = MODEL_AXIS
+        return P(*specs)
+
+    def dim_tp(axis_from_end: int):
+        specs = [None] * nd
+        if shape[nd - axis_from_end] % tp == 0:
+            specs[nd - axis_from_end] = MODEL_AXIS
+        return P(*specs)
+
+    if name == "embed":
+        return P(MODEL_AXIS, None) if shape[0] % tp == 0 else P(None, None)
+    if name == "lm_head":
+        return P(None, MODEL_AXIS) if shape[1] % tp == 0 else P(None, None)
+    if name == "frontend_proj":
+        return last_dim_tp()
+    if name in ("scale", "bias", "q_norm", "k_norm", "A_log", "D", "dt_bias",
+                "norm", "conv_w", "conv_b", "router"):
+        return P(*([None] * nd))
+    if group in ("attn", "xattn"):
+        if name in ("wq", "wk", "wv"):
+            return last_dim_tp()        # column-parallel
+        if name == "wo":
+            return dim_tp(2)            # row-parallel
+    if group == "moe":
+        if name in ("w1", "w2", "w3"):
+            # [L, E, d, f] / [L, E, f, d]: shard experts (EP == TP axis)
+            specs = [None] * nd
+            if shape[1] % tp == 0:
+                specs[1] = MODEL_AXIS
+            return P(*specs)
+        if name.startswith("shared_"):
+            return last_dim_tp() if name in ("shared_w1", "shared_w3") else dim_tp(2)
+    if group == "mlp":
+        if name in ("w1", "w3"):
+            return last_dim_tp()
+        if name == "w2":
+            return dim_tp(2)
+    if group == "ssm":
+        if name == "in_proj":
+            return last_dim_tp()
+        if name == "out_proj":
+            return dim_tp(2)
+    return P(*([None] * nd))
+
+
+def _add_data_sharding(spec: P, shape: tuple, plan: MeshPlan,
+                       skip_leading: bool = True) -> P:
+    """Shard one replicated dim over the data axes (ZeRO / FSDP style).
+
+    Prefers a non-leading dim (so per-layer gathers happen inside the layer
+    scan, not on the whole stacked stack).  Uses the innermost data axis
+    ("data", not "pod") — DCN-crossing weight gathers would be pathological.
+    """
+    axis = plan.dp_axes[-1]
+    size = plan.mesh.shape[axis]
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    if axis in parts:                 # already data-sharded (FSDP + ZeRO-1)
+        return spec
+    start = 1 if (skip_leading and len(shape) > 1) else 0
+    for i in range(start, len(shape)):
+        if parts[i] is None and shape[i] % size == 0 and shape[i] >= size:
+            parts[i] = axis
+            return P(*parts)
+    return spec
+
+
+def param_pspecs(cfg: ArchConfig, plan: MeshPlan, fsdp: bool = False):
+    """Pytree of PartitionSpec matching ``param_shapes(cfg)``.
+
+    ``fsdp=True`` additionally shards every parameter over the data axis
+    (ZeRO-3 style) — used for >20B-parameter training cells where even
+    TP-sharded bf16 weights + grads exceed HBM.
+    """
+    shapes = param_shapes(cfg)
+    tp = plan.model_size
+
+    def rule(p, sh):
+        spec = _param_rule(_names(p), sh, cfg, tp)
+        if fsdp:
+            spec = _add_data_sharding(spec, sh, plan)
+        return spec
+
+    return jax.tree.map_with_path(
+        rule, shapes, is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(i, int) for i in x))
+
+
+def zero1_pspecs(param_specs, cfg: ArchConfig, plan: MeshPlan):
+    """Optimizer-moment specs: parameter specs + data-axis sharding (ZeRO-1)."""
+    shapes = param_shapes(cfg)
+    return jax.tree.map_with_path(
+        lambda p, sh: _add_data_sharding(_lookup(param_specs, p), sh, plan),
+        shapes, is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(i, int) for i in x))
+
+
+def _lookup(tree, path):
+    node = tree
+    for k in path:
+        node = node[getattr(k, "key", getattr(k, "idx", None))]
+    return node
+
+
+# -------------------------------------------------------------- batch -------
+def batch_pspecs(plan: MeshPlan, batch_tree):
+    """PartitionSpecs matching an actual batch dict (ShapeDtypeStructs ok).
+
+    Every leading dim is treated as batch (DP-sharded when divisible);
+    remaining dims replicated.
+    """
+    def rule(leaf):
+        if len(leaf.shape) == 0:
+            return P()
+        dp = plan.dp_spec_for(leaf.shape[0])
+        return P(dp, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree.map(rule, batch_tree)
+
+
+def cache_pspecs(plan: MeshPlan, cache_tree):
+    """Decode-cache specs: batch over DP, sequence over the model axis (SP)."""
+    tp = plan.model_size
+
+    def rule(path, leaf):
+        name = _names(path)[-1]
+        sh = leaf.shape
+        dp = plan.dp_spec_for(sh[1]) if len(sh) > 1 else None
+        if name in ("k", "v"):
+            # [L, B, S, KH, hd]: shard a dim whose update index is static so
+            # the per-token dynamic_update_slice stays shard-local — KV heads
+            # first, head_dim second (partial-score psum); sharding the
+            # sequence dim would make GSPMD replicate the cache on every
+            # update ("involuntary full rematerialization").
+            if sh[3] % tp == 0:
+                return P(None, dp, None, MODEL_AXIS, None)
+            if sh[4] % tp == 0:
+                return P(None, dp, None, None, MODEL_AXIS)
+            seq_ax = MODEL_AXIS if sh[2] % tp == 0 else None
+            return P(None, dp, seq_ax, None, None)
+        if name in ("k_scale", "v_scale"):
+            if sh[3] % tp == 0:
+                return P(None, dp, None, MODEL_AXIS)
+            return P(None, dp, None, None)
+        if name == "conv":
+            return P(None, dp, None, None)
+        if name == "ssd":
+            # [L, B, H, N, P]: shard heads when divisible
+            h_ax = MODEL_AXIS if sh[2] % tp == 0 else None
+            return P(None, dp, h_ax, None, None)
+        if name == "enc_out":
+            return P(None, dp, None, None)
+        return P(*([None] * len(sh)))
+
+    return jax.tree.map_with_path(rule, cache_tree)
+
+
+def shardings(tree_of_specs, mesh: Mesh):
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))

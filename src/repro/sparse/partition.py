@@ -1,0 +1,126 @@
+"""Row partitions and the communication patterns of parallel SpMV / SpGEMM.
+
+This is what the paper models: given a 1-D (row-wise) partition of a sparse
+matrix over P processes, extract exactly which process sends how many bytes
+to which process for
+
+* **SpMV** (y = A x): process p needs x[j] for every column j with a nonzero
+  in p's rows owned by another process — one message per (owner -> p) pair
+  containing the distinct required entries (8 bytes each);
+* **SpGEMM** (C = A B): process p needs the full *rows* of B matching its
+  off-process A columns — one message per (owner -> p) pair containing the
+  CSR rows (12 bytes per nonzero: 8 value + 4 index).
+
+Returned patterns are (src, dst, size_bytes) arrays directly consumable by
+:func:`repro.core.models.phase_cost` and :func:`repro.net.simulate_phase`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .csr import CSR
+
+SPMV_ENTRY_BYTES = 8
+SPGEMM_NNZ_BYTES = 12
+
+
+@dataclasses.dataclass(frozen=True)
+class RowPartition:
+    """Contiguous balanced row partition: rows [starts[p], starts[p+1])."""
+
+    starts: np.ndarray   # [P+1]
+
+    @classmethod
+    def balanced(cls, n_rows: int, n_procs: int) -> "RowPartition":
+        base = n_rows // n_procs
+        extra = n_rows % n_procs
+        sizes = np.full(n_procs, base, dtype=np.int64)
+        sizes[:extra] += 1
+        return cls(np.concatenate([[0], np.cumsum(sizes)]))
+
+    @property
+    def n_procs(self) -> int:
+        return len(self.starts) - 1
+
+    def owner_of(self, rows) -> np.ndarray:
+        return np.searchsorted(self.starts, np.asarray(rows), side="right") - 1
+
+    def rows_of(self, p: int) -> tuple[int, int]:
+        return int(self.starts[p]), int(self.starts[p + 1])
+
+
+@dataclasses.dataclass
+class CommPattern:
+    """One communication phase: message (src[i] -> dst[i], size[i] bytes)."""
+
+    src: np.ndarray
+    dst: np.ndarray
+    size: np.ndarray
+    n_procs: int
+
+    @property
+    def n_msgs(self) -> int:
+        return int(self.src.size)
+
+    @property
+    def total_bytes(self) -> float:
+        return float(self.size.sum())
+
+    def max_msgs_per_proc(self) -> int:
+        if self.src.size == 0:
+            return 0
+        return int(np.bincount(self.dst, minlength=self.n_procs).max())
+
+
+def _needed_pairs(A: CSR, part: RowPartition) -> tuple[np.ndarray, np.ndarray]:
+    """Distinct (requesting proc, off-proc column) pairs over A's nonzeros."""
+    rows = np.repeat(np.arange(A.n_rows), A.row_lengths())
+    req = part.owner_of(rows)          # proc that owns the row
+    own = part.owner_of(A.indices)     # proc that owns the column
+    off = req != own
+    if not off.any():
+        return np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.int64)
+    key = req[off].astype(np.int64) * A.n_cols + A.indices[off]
+    uniq = np.unique(key)
+    return (uniq // A.n_cols).astype(np.int64), (uniq % A.n_cols).astype(np.int64)
+
+
+def spmv_comm_pattern(A: CSR, part: RowPartition) -> CommPattern:
+    """Messages for the halo exchange of y = A x under ``part``."""
+    req, col = _needed_pairs(A, part)
+    if req.size == 0:
+        return CommPattern(np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.int64),
+                           np.zeros(0), part.n_procs)
+    owner = part.owner_of(col)
+    # one message per distinct (owner -> requester), size = count * 8
+    pair_key = owner * part.n_procs + req
+    uniq, counts = np.unique(pair_key, return_counts=True)
+    return CommPattern(src=(uniq // part.n_procs).astype(np.int64),
+                       dst=(uniq % part.n_procs).astype(np.int64),
+                       size=counts.astype(np.float64) * SPMV_ENTRY_BYTES,
+                       n_procs=part.n_procs)
+
+
+def spgemm_comm_pattern(A: CSR, B: CSR, part: RowPartition) -> CommPattern:
+    """Messages to fetch remote B rows for C = A B under ``part``.
+
+    Process p gathers B rows for its off-process A columns; message size is
+    the total nnz of those rows times 12 bytes.
+    """
+    req, col = _needed_pairs(A, part)
+    if req.size == 0:
+        return CommPattern(np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.int64),
+                           np.zeros(0), part.n_procs)
+    owner = part.owner_of(col)
+    row_nnz = B.row_lengths()[col].astype(np.float64)
+    pair_key = owner * part.n_procs + req
+    order = np.argsort(pair_key, kind="stable")
+    pair_key, row_nnz = pair_key[order], row_nnz[order]
+    uniq, starts = np.unique(pair_key, return_index=True)
+    sums = np.add.reduceat(row_nnz, starts)
+    return CommPattern(src=(uniq // part.n_procs).astype(np.int64),
+                       dst=(uniq % part.n_procs).astype(np.int64),
+                       size=sums * SPGEMM_NNZ_BYTES,
+                       n_procs=part.n_procs)

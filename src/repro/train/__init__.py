@@ -1,0 +1,5 @@
+from .optim import AdamWConfig, init_opt_state, adamw_update, schedule
+from .trainer import Trainer, TrainConfig
+
+__all__ = ["AdamWConfig", "init_opt_state", "adamw_update", "schedule",
+           "Trainer", "TrainConfig"]

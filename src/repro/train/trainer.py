@@ -1,0 +1,104 @@
+"""Training loop: jitted step, checkpoint/resume, straggler watchdog.
+
+Fault-tolerance model (single-process simulation of the multi-host recipe):
+
+* checkpoint every ``ckpt_every`` steps, asynchronously; on (re)start the
+  trainer resumes from the latest complete checkpoint — a crashed run replays
+  identically because the data pipeline is a pure function of (seed, step).
+* the straggler watchdog compares each step's wall time against an SLA —
+  either a modeled step time (the paper's performance model, when provided)
+  or a running median x tolerance — and records offenders; on a real pod
+  this signal drives re-dispatch of the slow host's data shards
+  (:func:`repro.data.shard_assignment`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.ckpt import CheckpointManager
+from repro.nn.config import ArchConfig
+from repro.nn.model import init_params
+from .optim import AdamWConfig, init_opt_state
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    seed: int = 0
+    microbatches: int = 1
+    sla_seconds: float | None = None   # modeled step time (perf model)
+    sla_tolerance: float = 3.0
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, tcfg: TrainConfig,
+                 opt_cfg: AdamWConfig | None = None,
+                 step_hook: Callable[[int], None] | None = None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.opt_cfg = opt_cfg or AdamWConfig()
+        self.step_hook = step_hook       # test hook (e.g. straggler injection)
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir)
+        # lazy import: launch.steps imports repro.train.optim (package cycle)
+        from repro.launch.steps import make_train_step
+        self._step_fn = jax.jit(make_train_step(
+            cfg, self.opt_cfg, microbatches=tcfg.microbatches))
+        self.stragglers: list[tuple[int, float]] = []
+        self.history: list[dict[str, float]] = []
+
+    # ------------------------------------------------------------------ run --
+    def init_state(self):
+        params = init_params(self.cfg, self.tcfg.seed)
+        return params, init_opt_state(params)
+
+    def run(self, data_iter, params=None, opt_state=None) -> dict[str, Any]:
+        if params is None:
+            params, opt_state = self.init_state()
+        start = 0
+        restored = self.ckpt.restore_latest({"params": params,
+                                             "opt": opt_state})
+        if restored[0] is not None:
+            start = restored[0]
+            params, opt_state = restored[1]["params"], restored[1]["opt"]
+
+        times: list[float] = []
+        it = iter(data_iter)
+        for step in range(start, self.tcfg.steps):
+            batch = next(it) if not hasattr(data_iter, "batch_at") \
+                else data_iter.batch_at(step)
+            t0 = time.perf_counter()
+            if self.step_hook:
+                self.step_hook(step)
+            params, opt_state, metrics = self._step_fn(params, opt_state,
+                                                       batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            times.append(dt)
+            self._watchdog(step, dt, times)
+            if step % self.tcfg.log_every == 0 or step == self.tcfg.steps - 1:
+                self.history.append(
+                    {"step": step, "loss": float(metrics["loss"]),
+                     "grad_norm": float(metrics["grad_norm"]),
+                     "sec": dt})
+            if (step + 1) % self.tcfg.ckpt_every == 0:
+                self.ckpt.save(step + 1, {"params": params, "opt": opt_state})
+        self.ckpt.save(self.tcfg.steps, {"params": params, "opt": opt_state},
+                       wait=True)
+        return {"params": params, "opt_state": opt_state,
+                "history": self.history, "stragglers": self.stragglers}
+
+    # ------------------------------------------------------------- watchdog --
+    def _watchdog(self, step: int, dt: float, times: list[float]):
+        sla = self.tcfg.sla_seconds
+        if sla is None and len(times) >= 5:
+            sla = float(np.median(times[-20:]))
+        if sla is not None and dt > self.tcfg.sla_tolerance * sla:
+            self.stragglers.append((step, dt))

@@ -1,0 +1,53 @@
+"""The assigned architecture table, verified field by field."""
+import pytest
+
+from repro.configs import get_config, ARCH_IDS
+
+# (layers, d_model, heads, kv_heads, d_ff, vocab)
+EXPECT = {
+    "llama3.2-3b": (28, 3072, 24, 8, 8192, 128256),
+    "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+    "starcoder2-3b": (30, 3072, 24, 2, 12288, 49152),
+    "qwen3-32b": (64, 5120, 64, 8, 25600, 151936),
+    "deepseek-moe-16b": (28, 2048, 16, 16, None, 102400),
+    "qwen3-moe-30b-a3b": (48, 2048, 32, 4, None, 151936),
+    "mamba2-130m": (24, 768, 0, 0, 0, 50280),
+    "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+    "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+    "whisper-small": (12, 768, 12, 12, 3072, 51865),
+}
+
+
+def test_all_archs_present():
+    assert sorted(ARCH_IDS) == sorted(EXPECT)
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECT))
+def test_config_exact(arch):
+    cfg = get_config(arch)
+    L, d, h, kv, ff, v = EXPECT[arch]
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == h
+    assert cfg.n_kv_heads == kv
+    if ff is not None:
+        assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+
+
+def test_moe_details():
+    ds = get_config("deepseek-moe-16b")
+    assert (ds.n_experts, ds.n_experts_active, ds.n_shared_experts,
+            ds.moe_d_ff) == (64, 6, 2, 1408)
+    assert ds.first_dense_layers == 1
+    q = get_config("qwen3-moe-30b-a3b")
+    assert (q.n_experts, q.n_experts_active, q.moe_d_ff) == (128, 8, 768)
+
+
+def test_family_flags():
+    assert get_config("mamba2-130m").ssm_state == 128
+    assert get_config("hymba-1.5b").ssm_state == 16
+    assert get_config("qwen3-32b").qk_norm
+    assert get_config("qwen2-vl-72b").m_rope
+    assert get_config("whisper-small").cross_attention
+    assert get_config("whisper-small").encoder_seq == 1500

@@ -1,0 +1,177 @@
+"""Unit + property tests for the performance-model core (the paper itself)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (blue_waters, tpu_v5e, message_time, queue_time,
+                        phase_cost, model_ladder, MODEL_LEVELS,
+                        TorusTopology, average_hops, contention_ell, cube_side)
+from repro.core.params import SHORT, EAGER, REND
+
+
+# ---------------------------------------------------------------- params ----
+def test_table1_values():
+    p = blue_waters()
+    # spot-check the paper's Table 1
+    assert p.alpha[0, SHORT] == pytest.approx(4.4e-7)
+    assert p.alpha[2, EAGER] == pytest.approx(7.0e-6)
+    assert p.Rb[1, REND] == pytest.approx(6.2e9)
+    assert np.isinf(p.RN[2, SHORT])
+    assert p.RN[2, REND] == pytest.approx(6.6e9)
+    assert p.gamma == pytest.approx(8.4e-9)   # Eq. (4)
+    assert p.delta == pytest.approx(1.0e-10)  # Eq. (6)
+
+
+def test_protocol_classification():
+    p = blue_waters()
+    assert list(p.protocol_of([1, 512, 513, 8192, 8193])) == [
+        SHORT, SHORT, EAGER, EAGER, REND]
+
+
+# ---------------------------------------------------------------- models ----
+def test_postal_equals_alpha_beta():
+    p = blue_waters()
+    t = message_time(p, 1000, 2, use_maxrate=False)
+    assert t == pytest.approx(p.alpha[2, EAGER] + 1000 / p.Rb[2, EAGER])
+
+
+def test_maxrate_reduces_to_postal_at_low_ppn():
+    """Eq. (2): with ppn*Rb < RN the max-rate model is the postal model."""
+    p = blue_waters()
+    s = 1 << 20
+    t_postal = message_time(p, s, 2, use_maxrate=False)
+    t_mr = message_time(p, s, 2, ppn=1)
+    # ppn=1: min(RN, Rb) = Rb since Rb=2.9e9 < RN=6.6e9
+    assert t_mr == pytest.approx(t_postal)
+
+
+def test_maxrate_saturates_injection():
+    """With many senders the node injection cap dominates."""
+    p = blue_waters()
+    s = 1 << 20
+    t4 = message_time(p, s, 2, ppn=4)     # 4*2.9e9 > 6.6e9 -> capped
+    expect = p.alpha[2, REND] + 4 * s / 6.6e9
+    assert t4 == pytest.approx(expect)
+
+
+def test_node_aware_cheaper_on_socket():
+    p = blue_waters()
+    t_sock = message_time(p, 4096, 0)
+    t_net = message_time(p, 4096, 2)
+    assert t_sock < t_net
+
+
+def test_queue_time_quadratic():
+    p = blue_waters()
+    assert queue_time(p, 1000) == pytest.approx(p.gamma * 1e6)
+
+
+@given(st.integers(1, 10**6), st.integers(0, 2))
+@settings(max_examples=50, deadline=None)
+def test_message_time_monotone_in_size(size, loc):
+    """Property: cost is nondecreasing in message size (within a protocol)."""
+    p = blue_waters()
+    t1 = float(message_time(p, size, loc))
+    t2 = float(message_time(p, size + max(size // 10, 1), loc))
+    proto_same = p.protocol_of(size) == p.protocol_of(size + max(size // 10, 1))
+    if proto_same:
+        assert t2 >= t1
+
+
+@given(st.integers(0, 5000))
+@settings(max_examples=30, deadline=None)
+def test_queue_monotone(n):
+    p = blue_waters()
+    assert queue_time(p, n + 1) > queue_time(p, n) or n == 0 and queue_time(p, 1) > 0
+
+
+def test_phase_cost_ladder_ordering():
+    """Each model rung adds a nonnegative term."""
+    rng = np.random.default_rng(0)
+    n_procs, n_msgs = 64, 400
+    src = rng.integers(0, n_procs, n_msgs)
+    dst = (src + rng.integers(1, n_procs, n_msgs)) % n_procs
+    size = rng.integers(8, 1 << 18, n_msgs).astype(float)
+    loc = np.where(src // 16 == dst // 16, 1, 2)
+    p = blue_waters()
+    ladder = model_ladder(p, src, dst, size, loc, node_of=lambda q: q // 16,
+                          n_torus_nodes=4, torus_ndim=3,
+                          procs_per_torus_node=32, n_procs=n_procs)
+    t_na = ladder["node_aware"].total
+    t_q = ladder["queue"].total
+    t_c = ladder["contention"].total
+    assert t_q >= t_na
+    assert t_c >= t_q
+    assert ladder["queue"].queue > 0
+    assert ladder["contention"].contention > 0
+
+
+def test_phase_cost_empty():
+    p = blue_waters()
+    cb = phase_cost(p, [], [], [], [])
+    assert cb.total == 0.0
+
+
+# -------------------------------------------------------------- topology ----
+def test_torus_coords_roundtrip():
+    t = TorusTopology((4, 3, 5))
+    ranks = np.arange(t.size)
+    assert np.array_equal(t.rank(t.coords(ranks)), ranks)
+
+
+def test_torus_hops_symmetric_and_triangle():
+    t = TorusTopology((5, 5))
+    rng = np.random.default_rng(1)
+    for _ in range(20):
+        a, b, c = rng.integers(0, t.size, 3)
+        assert t.hops(a, b) == t.hops(b, a)
+        assert t.hops(a, b) <= t.hops(a, c) + t.hops(c, b)
+        assert t.hops(a, a) == 0
+
+
+def test_torus_wraparound():
+    t = TorusTopology((8,), wrap=True)
+    assert t.hops(0, 7) == 1
+    t2 = TorusTopology((8,), wrap=False)
+    assert t2.hops(0, 7) == 7
+
+
+def test_route_length_matches_hops():
+    t = TorusTopology((4, 4), wrap=True)
+    rng = np.random.default_rng(2)
+    for _ in range(20):
+        a, b = rng.integers(0, 16, 2)
+        assert len(t.route_links(int(a), int(b))) == t.hops(a, b)
+
+
+def test_route_links_conserve_bytes():
+    """Sum of per-link bytes == sum over messages of size*hops."""
+    t = TorusTopology((4, 4, 4), wrap=False)
+    rng = np.random.default_rng(3)
+    src = rng.integers(0, 64, 50)
+    dst = rng.integers(0, 64, 50)
+    size = rng.integers(1, 1000, 50).astype(float)
+    acc = t.accumulate_link_bytes(src, dst, size)
+    expect = float(sum(z * t.hops(a, b) for a, b, z in zip(src, dst, size)))
+    assert sum(acc.values()) == pytest.approx(expect)
+
+
+def test_cube_side_and_avg_hops():
+    assert cube_side(64, 3) == 4
+    assert cube_side(65, 3) == 5
+    assert average_hops(1, 3) == 0.0
+    # line of length 4: E|i-j| = (16-1)/12 = 1.25; 3 dims -> 3.75
+    assert average_hops(64, 3) == pytest.approx(3.75)
+
+
+def test_contention_ell_formula():
+    # Eq. (7): ell = 2 h^3 b ppn
+    h = average_hops(64, 3)
+    assert contention_ell(64, 3, 100.0, 32) == pytest.approx(2 * h**3 * 100 * 32)
+
+
+@given(st.integers(2, 512), st.sampled_from([2, 3]))
+@settings(max_examples=40, deadline=None)
+def test_avg_hops_bounded_by_diameter(n, d):
+    c = cube_side(n, d)
+    assert 0 <= average_hops(n, d) <= d * c

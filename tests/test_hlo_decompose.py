@@ -1,0 +1,144 @@
+"""Tests for HLO collective parsing and the p2p decomposition/pricing."""
+import numpy as np
+import pytest
+
+from repro.core import (parse_collectives, shape_bytes, tpu_v5e,
+                        PodGeometry, decompose_collective, price_collective,
+                        price_step)
+from repro.core.hlo import CollectiveOp, parse_iota_groups
+
+HLO = """
+HloModule jit_step
+
+%add (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %add.1 = f32[] add(%x, %y)
+}
+
+%body (p: (s32[], bf16[8,128])) -> (s32[], bf16[8,128]) {
+  %p = (s32[], bf16[8,128]) parameter(0)
+  %g = bf16[8,128]{1,0} get-tuple-element(%p), index=1
+  %ar = bf16[8,128]{1,0} all-reduce(%g), channel_id=1, replica_groups=[32,16]<=[512], use_global_device_ids=true, to_apply=%add
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], bf16[8,128]) tuple(%i, %ar)
+}
+
+%cond (p: (s32[], bf16[8,128])) -> pred[] {
+  %p = (s32[], bf16[8,128]) parameter(0)
+  ROOT %c = pred[] constant(true)
+}
+
+ENTRY %main (a: bf16[8,128]) -> bf16[8,128] {
+  %a = bf16[8,128]{1,0} parameter(0)
+  %ag = bf16[8,2048]{1,0} all-gather(%a), channel_id=2, replica_groups=[32,16]<=[512], dimensions={1}, use_global_device_ids=true
+  %rs = bf16[8,128]{1,0} reduce-scatter(%ag), channel_id=3, replica_groups=[32,16]<=[512], dimensions={1}, to_apply=%add
+  %a2a = bf16[8,128]{1,0} all-to-all(%rs), channel_id=4, replica_groups=[64,8]<=[512], dimensions={0}
+  %cp = bf16[8,128]{1,0} collective-permute(%a2a), channel_id=5, source_target_pairs={{0,16},{16,32},{32,0}}
+  %w = (s32[], bf16[8,128]) tuple-and-while-stand-in(%cp)
+  %wh = (s32[], bf16[8,128]) while(%w), condition=%cond, body=%body
+  ROOT %out = bf16[8,128]{1,0} get-tuple-element(%wh), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert shape_bytes("bf16[8,128]") == 8 * 128 * 2
+    assert shape_bytes("(f32[4,4], bf16[2])") == 64 + 4
+    assert shape_bytes("f32[]") == 4
+
+
+def test_iota_groups():
+    g = parse_iota_groups(2, 4, [8], None)
+    assert g.shape == (2, 4)
+    assert list(g[0]) == [0, 1, 2, 3]
+    gt = parse_iota_groups(4, 2, [2, 4], [1, 0])
+    # iota(8).reshape(2,4).T.reshape(4,2) -> rows [0,4],[1,5],[2,6],[3,7]
+    assert list(gt[0]) == [0, 4]
+    assert list(gt[1]) == [1, 5]
+
+
+def test_parse_collectives_kinds_and_loops():
+    ops = parse_collectives(HLO, default_trip_count=12)
+    kinds = sorted(o.kind for o in ops)
+    assert kinds == ["all-gather", "all-reduce", "all-to-all",
+                     "collective-permute", "reduce-scatter"]
+    by_kind = {o.kind: o for o in ops}
+    assert by_kind["all-reduce"].count == 12          # inside while body
+    assert by_kind["all-gather"].count == 1
+    assert by_kind["all-reduce"].group_size == 16
+    assert by_kind["all-to-all"].group_size == 8
+    assert by_kind["collective-permute"].source_target_pairs == [
+        (0, 16), (16, 32), (32, 0)]
+    assert by_kind["all-gather"].result_bytes == 8 * 2048 * 2
+
+
+def test_decompose_all_reduce_ring():
+    op = CollectiveOp("all-reduce", 1024.0,
+                      np.arange(8).reshape(1, 8), None, 1, "")
+    ms = decompose_collective(op)
+    # ring: every device sends 2(k-1) shards of B/k to its neighbor
+    assert ms.src.size == 8
+    assert np.allclose(ms.size, 1024 / 8)
+    assert np.allclose(ms.mult, 14)
+    assert ms.outstanding == 1 and ms.waves == 14
+    # bytes on the wire per device: 2(k-1)/k * B  (the classic ring volume)
+    assert ms.size[0] * ms.mult[0] == pytest.approx(2 * 7 / 8 * 1024)
+
+
+def test_decompose_all_to_all_pairwise():
+    op = CollectiveOp("all-to-all", 800.0, np.arange(4).reshape(1, 4), None, 1, "")
+    ms = decompose_collective(op)
+    assert ms.src.size == 4 * 3
+    assert ms.outstanding == 3 and ms.waves == 1
+    assert np.allclose(ms.size, 200.0)
+
+
+def test_geometry_locality_and_hops():
+    g = PodGeometry(n_pods=2)
+    assert g.locality(0, 3) == 0            # same host
+    assert g.locality(0, 4) == 1            # same pod ICI
+    assert g.locality(0, 256) == 2          # cross pod DCN
+    assert g.hops(0, 1) == 1
+    assert g.hops(0, 15) == 1               # torus wraps columns
+    assert g.hops(0, 16) == 1               # next row
+    assert g.hops(0, 8 * 16 + 8) == 16      # mid-torus: 8 + 8
+
+
+def test_price_ring_vs_a2a_queue():
+    """The paper's point, adapted: fragmented many-peer comm pays gamma*n^2."""
+    params = tpu_v5e()
+    geom = PodGeometry(n_pods=1)
+    ring = CollectiveOp("all-reduce", 1 << 20,
+                        np.arange(256).reshape(1, 256), None, 1, "")
+    a2a = CollectiveOp("all-to-all", 1 << 20,
+                       np.arange(256).reshape(1, 256), None, 1, "")
+    c_ring = price_collective(ring, geom, params)
+    c_a2a = price_collective(a2a, geom, params)
+    assert c_ring.queue < c_a2a.queue      # 255 outstanding transfers vs 1
+    assert c_a2a.contention > c_ring.contention  # hop-distance sharing
+    assert c_ring.naive_time > 0
+
+
+def test_price_step_totals():
+    params = tpu_v5e()
+    geom = PodGeometry(n_pods=1)
+    ops = [CollectiveOp("all-gather", 4096.0, np.arange(16).reshape(1, 16),
+                        None, 3, "")]
+    m = price_step(ops, geom, params)
+    one = price_collective(ops[0], geom, params)
+    assert m.model_time == pytest.approx(3 * one.model_time)
+    assert m.naive_time == pytest.approx(3 * one.naive_time)
+
+
+def test_dcn_pricing():
+    """Cross-pod rings pay DCN latency/bandwidth on pod-crossing messages."""
+    params = tpu_v5e()
+    geom = PodGeometry(n_pods=2)
+    # group strides across pods: devices 0 and 256 etc.
+    grp = np.array([[0, 256]])
+    op = CollectiveOp("all-reduce", 1 << 20, grp, None, 1, "")
+    c = price_collective(op, geom, params)
+    intra = CollectiveOp("all-reduce", 1 << 20, np.array([[0, 4]]), None, 1, "")
+    ci = price_collective(intra, geom, params)
+    assert c.transport > ci.transport      # DCN much slower than ICI

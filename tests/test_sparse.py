@@ -1,0 +1,170 @@
+"""Tests for the sparse substrate: CSR ops, problems, partitions, AMG."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sparse import (CSR, eye, poisson_3d, elasticity_like_3d,
+                          build_hierarchy, vcycle, RowPartition,
+                          spmv_comm_pattern, spgemm_comm_pattern)
+from repro.sparse.partition import SPMV_ENTRY_BYTES, SPGEMM_NNZ_BYTES
+
+
+def _random_csr(rng, n, m, density=0.1):
+    nnz = max(1, int(n * m * density))
+    rows = rng.integers(0, n, nnz)
+    cols = rng.integers(0, m, nnz)
+    vals = rng.standard_normal(nnz)
+    return CSR.from_coo(rows, cols, vals, (n, m))
+
+
+# ---------------------------------------------------------------- CSR -------
+def test_from_coo_sums_duplicates():
+    A = CSR.from_coo([0, 0, 1], [1, 1, 0], [2.0, 3.0, 1.0], (2, 2))
+    assert A.to_dense().tolist() == [[0.0, 5.0], [1.0, 0.0]]
+
+
+@given(st.integers(1, 30), st.integers(1, 30), st.integers(0, 10**6))
+@settings(max_examples=25, deadline=None)
+def test_spmv_matches_dense(n, m, seed):
+    rng = np.random.default_rng(seed)
+    A = _random_csr(rng, n, m, 0.2)
+    x = rng.standard_normal(m)
+    np.testing.assert_allclose(A.spmv(x), A.to_dense() @ x, rtol=1e-10, atol=1e-12)
+
+
+@given(st.integers(1, 25), st.integers(1, 25), st.integers(1, 25),
+       st.integers(0, 10**6))
+@settings(max_examples=25, deadline=None)
+def test_spgemm_matches_dense(n, k, m, seed):
+    rng = np.random.default_rng(seed)
+    A = _random_csr(rng, n, k, 0.2)
+    B = _random_csr(rng, k, m, 0.2)
+    C = A.matmul(B, chunk_rows=7)
+    np.testing.assert_allclose(C.to_dense(), A.to_dense() @ B.to_dense(),
+                               rtol=1e-10, atol=1e-12)
+
+
+def test_transpose_roundtrip():
+    rng = np.random.default_rng(3)
+    A = _random_csr(rng, 17, 11, 0.3)
+    np.testing.assert_allclose(A.transpose().to_dense(), A.to_dense().T)
+
+
+def test_diagonal_and_prune():
+    A = CSR.from_coo([0, 0, 1], [0, 1, 1], [5.0, 1e-14, 2.0], (2, 2))
+    np.testing.assert_allclose(A.diagonal(), [5.0, 2.0])
+    assert A.prune(1e-12).nnz == 2
+
+
+# ------------------------------------------------------------ problems ------
+def test_poisson_symmetric_spd():
+    A = poisson_3d(4)
+    Ad = A.to_dense()
+    np.testing.assert_allclose(Ad, Ad.T)
+    assert np.linalg.eigvalsh(Ad).min() > 0
+
+
+def test_elasticity_structure():
+    A = elasticity_like_3d(5)
+    assert A.shape == (375, 375)
+    Ad = A.to_dense()
+    np.testing.assert_allclose(Ad, Ad.T, atol=1e-12)
+    assert np.linalg.eigvalsh(Ad).min() > 0
+    # interior nodes: 27-point stencil x 3 dof = 81 nnz/row
+    interior = 3 * (5 * 5 * 2 + 5 * 2 + 2)  # some interior dof index
+    assert A.row_lengths().max() == 81
+
+
+# ------------------------------------------------------------ partition -----
+def test_balanced_partition():
+    p = RowPartition.balanced(10, 3)
+    assert list(np.diff(p.starts)) == [4, 3, 3]
+    assert p.owner_of([0, 3, 4, 9]).tolist() == [0, 0, 1, 2]
+
+
+def test_spmv_pattern_conservation():
+    """Each off-process (row-block, column) need is counted exactly once."""
+    A = poisson_3d(6)
+    part = RowPartition.balanced(A.n_rows, 8)
+    cp = spmv_comm_pattern(A, part)
+    # manual count of distinct (requester, column) pairs
+    rows = np.repeat(np.arange(A.n_rows), A.row_lengths())
+    req = part.owner_of(rows)
+    own = part.owner_of(A.indices)
+    off = req != own
+    expect = len(set(zip(req[off], A.indices[off]))) * SPMV_ENTRY_BYTES
+    assert cp.total_bytes == expect
+    assert (cp.src != cp.dst).all()
+
+
+def test_spgemm_pattern_counts_remote_rows():
+    A = poisson_3d(5)
+    part = RowPartition.balanced(A.n_rows, 5)
+    cp = spgemm_comm_pattern(A, A, part)
+    rows = np.repeat(np.arange(A.n_rows), A.row_lengths())
+    req = part.owner_of(rows)
+    own = part.owner_of(A.indices)
+    off = req != own
+    pairs = set(zip(req[off], A.indices[off]))
+    expect = sum(A.row_lengths()[c] for _, c in pairs) * SPGEMM_NNZ_BYTES
+    assert cp.total_bytes == expect
+
+
+def test_no_partition_no_comm():
+    A = poisson_3d(4)
+    cp = spmv_comm_pattern(A, RowPartition.balanced(A.n_rows, 1))
+    assert cp.n_msgs == 0
+
+
+# ------------------------------------------------------------ AMG -----------
+def test_hierarchy_coarsens():
+    A = poisson_3d(10)
+    levels = build_hierarchy(A)
+    sizes = [l.A.n_rows for l in levels]
+    assert len(levels) >= 3
+    assert all(sizes[i] > sizes[i + 1] for i in range(len(sizes) - 1))
+    # coarse matrices get denser per row (the paper's premise)
+    nnz_per_row = [l.A.nnz / l.A.n_rows for l in levels]
+    assert nnz_per_row[1] > nnz_per_row[0]
+
+
+def test_vcycle_converges_poisson():
+    A = poisson_3d(8)
+    levels = build_hierarchy(A)
+    rng = np.random.default_rng(0)
+    b = rng.standard_normal(A.n_rows)
+    x = np.zeros_like(b)
+    for _ in range(20):
+        x = vcycle(levels, b, x)
+    assert np.linalg.norm(b - A.spmv(x)) < 1e-3 * np.linalg.norm(b)
+
+
+def test_galerkin_is_pt_a_p():
+    from repro.sparse.amg import galerkin
+    rng = np.random.default_rng(1)
+    A = _random_csr(rng, 12, 12, 0.3)
+    P = _random_csr(rng, 12, 5, 0.4)
+    Ac = galerkin(A, P)
+    np.testing.assert_allclose(Ac.to_dense(),
+                               P.to_dense().T @ A.to_dense() @ P.to_dense(),
+                               rtol=1e-10, atol=1e-12)
+
+
+def test_interpolation_partitions_unity_for_mmatrix():
+    """For an M-matrix with zero row sums, direct interp rows sum to ~1."""
+    from repro.sparse.amg import strength_matrix, cf_split, direct_interpolation
+    n = 32
+    # 1-D Laplacian without boundary elimination: rows sum to zero inside
+    rows = list(range(n)) + list(range(n - 1)) + list(range(1, n))
+    cols = list(range(n)) + list(range(1, n)) + list(range(n - 1))
+    vals = [2.0] * n + [-1.0] * (2 * (n - 1))
+    A = CSR.from_coo(rows, cols, vals, (n, n))
+    S = strength_matrix(A, 0.25)
+    state = cf_split(S)
+    P = direct_interpolation(A, S, state)
+    # interior F-points (zero row sum) must interpolate a partition of unity;
+    # boundary rows have nonzero row sums and legitimately sum to less.
+    fpts = [i for i in np.nonzero(state == -1)[0] if 0 < i < n - 1]
+    row_sums = np.asarray([P.row(i)[1].sum() for i in fpts])
+    assert row_sums.size > 0
+    np.testing.assert_allclose(row_sums, 1.0, atol=1e-12)
