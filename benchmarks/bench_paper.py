@@ -4,8 +4,10 @@ Each function returns rows of (name, us_per_call, derived):
   * us_per_call — wall time of the benchmark body per evaluation;
   * derived     — the figure's headline quantity (fit ratios, model accuracy).
 
-"Measured" data comes from the mechanistic simulator (see DESIGN.md §4)
-instantiated with the paper's Table-1 ground truth.
+"Measured" data comes from the mechanistic simulator (the CommPhase engine's
+event-level side, DESIGN.md §4) instantiated with the paper's Table-1 ground
+truth; both model and simulator sweep the AMG hierarchy through the batched
+``CommPhase`` entry points (DESIGN.md §1).
 """
 from __future__ import annotations
 
@@ -13,12 +15,13 @@ import time
 
 import numpy as np
 
-from repro.core import (blue_waters, model_ladder, MODEL_LEVELS)
+from repro.core import (blue_waters, model_ladder_many, MODEL_LEVELS)
 from repro.core.fitting import (fit_alpha_beta, fit_RN, fit_gamma, fit_delta)
 from repro.core.params import PROTOCOL_NAMES
 from repro.core.topology import contention_ell, average_hops
-from repro.net import (blue_waters_machine, simulate_phase, pingpong_sweep,
-                       ppn_sweep, high_volume_pingpong, contention_line_test)
+from repro.net import (blue_waters_machine, simulate, simulate_phase,
+                       simulate_many, pingpong_sweep, ppn_sweep,
+                       high_volume_pingpong, contention_line_test)
 from repro.sparse import (elasticity_like_3d, build_hierarchy, RowPartition,
                           spmv_comm_pattern, spgemm_comm_pattern)
 
@@ -130,27 +133,29 @@ def bench_fig7_fig9_contention():
 
 
 # --------------------------------------------------------- Fig 1/10/11 ------
-def _phase_measured(machine, cp, seed=0):
-    """Simulate with irregular envelope arrival (the paper's Sec-5 regime:
-    receives match at ~n^2/3 queue positions, not in posted order)."""
-    rng = np.random.default_rng(seed)
-    arrival = {}
-    for p in np.unique(cp.dst):
-        ids = np.nonzero(cp.dst == p)[0]
-        arrival[int(p)] = rng.permutation(ids)
-    return simulate_phase(machine, cp.src, cp.dst, cp.size,
-                          arrival_order=arrival).time
+def _amg_phases(machine, levels, opname, max_procs=1024):
+    """One machine-bound CommPhase per AMG level (empty patterns skipped).
 
-
-def _phase_modeled(machine, cp, level):
-    lad = model_ladder(machine.params, cp.src, cp.dst, cp.size,
-                       machine.locality(cp.src, cp.dst),
-                       node_of=machine.node_of,
-                       n_torus_nodes=machine.torus.size,
-                       torus_ndim=machine.torus.ndim,
-                       procs_per_torus_node=machine.procs_per_torus_node,
-                       n_procs=cp.n_procs)
-    return {lvl: b.total for lvl, b in lad.items()}
+    Returns (level index, CommPhase) pairs; locality, protocol, routing
+    endpoints and active-sender counts are cached once per phase and shared
+    by the model ladder and the simulator below.
+    """
+    out = []
+    for li, lvl in enumerate(levels):
+        Al = lvl.A
+        n_procs = min(max_procs, max(Al.n_rows // 2, 2))
+        part = RowPartition.balanced(Al.n_rows, n_procs)
+        if opname == "spmv":
+            cp = spmv_comm_pattern(Al, part)
+        else:
+            P = levels[li + 1].P if li + 1 < len(levels) else None
+            if P is None:
+                break
+            cp = spgemm_comm_pattern(Al, P, part)
+        if cp.n_msgs == 0:
+            continue
+        out.append((li, cp.bind(machine)))
+    return out
 
 
 def bench_amg_spmv_spgemm(save_json: str | None = None):
@@ -162,6 +167,9 @@ def bench_amg_spmv_spgemm(save_json: str | None = None):
       * adding the gamma*n^2 queue term closes most of that gap;
       * the contention term is an upper-bound style estimate that brackets
         from above (the paper itself reports over-prediction).
+
+    "Measured" uses the paper's Sec-5 irregular regime: random envelope
+    arrival, so receives match at ~n^2/3 queue positions.
     """
     A = elasticity_like_3d(14)       # 8232-dof elasticity-like operator
     levels = build_hierarchy(A, theta=0.25)
@@ -171,30 +179,26 @@ def bench_amg_spmv_spgemm(save_json: str | None = None):
     detail = []
     for opname in ("spmv", "spgemm_AP"):
         t0 = time.perf_counter()
+        tagged = _amg_phases(machine, levels,
+                             "spmv" if opname == "spmv" else "spgemm")
+        phases = [ph for _, ph in tagged]
+        arrivals = [ph.random_arrival_order(np.random.default_rng(0))
+                    for ph in phases]
+        measured = [r.time for r in
+                    simulate_many(phases, arrival_orders=arrivals)]
+        ladders = model_ladder_many(phases)
         under_na, err_q, share = [], [], []
-        for li, lvl in enumerate(levels):
-            Al = lvl.A
-            n_procs = min(1024, max(Al.n_rows // 2, 2))
-            part = RowPartition.balanced(Al.n_rows, n_procs)
-            if opname == "spmv":
-                cp = spmv_comm_pattern(Al, part)
-            else:
-                P = levels[li + 1].P if li + 1 < len(levels) else None
-                if P is None:
-                    break
-                cp = spgemm_comm_pattern(Al, P, part)
-            if cp.n_msgs == 0:
-                continue
-            meas = _phase_measured(machine, cp)
-            mod = _phase_modeled(machine, cp, li)
+        for (li, ph), meas, lad in zip(tagged, measured, ladders):
+            mod = {lvl: b.total for lvl, b in lad.items()}
             under_na.append((meas - mod["node_aware"]) / meas)
             err_q.append(abs(mod["queue"] - meas) / meas)
             share.append(1.0 - mod["node_aware"] / meas)
+            Al = levels[li].A
             detail.append({
                 "op": opname, "level": li, "rows": int(Al.n_rows),
                 "nnz_per_row": float(Al.nnz / Al.n_rows),
-                "procs": n_procs,
-                "max_msgs_per_proc": int(cp.max_msgs_per_proc()),
+                "procs": ph.n_procs,
+                "max_msgs_per_proc": int(ph.max_msgs_per_proc()),
                 "measured": meas,
                 **{k: v for k, v in mod.items()},
             })
@@ -210,6 +214,39 @@ def bench_amg_spmv_spgemm(save_json: str | None = None):
         with open(save_json, "w") as f:
             json.dump(detail, f, indent=1)
     return rows
+
+
+# ------------------------------------------------- simulator throughput -----
+def bench_simulator_throughput():
+    """Simulator throughput (messages/sec) on the message-heaviest AMG level.
+
+    Tracks the CommPhase engine's headline speedup: vectorized max-rate
+    transport, one-shot dimension-ordered link routing, and the batched
+    receive-queue Fenwick walk.  ``cold`` rebuilds the CommPhase every call
+    (the full ``simulate_phase`` path); ``prebuilt`` reuses the cached phase
+    as a hierarchy sweep via ``simulate_many`` would.
+    """
+    A = elasticity_like_3d(14)
+    levels = build_hierarchy(A, theta=0.25)
+    machine = blue_waters_machine((4, 4, 2))
+    _, phase = max(_amg_phases(machine, levels, "spmv"),
+                   key=lambda t: t[1].n_msgs)
+    arrival = phase.random_arrival_order(np.random.default_rng(0))
+    reps = 5
+    simulate(phase, arrival_order=arrival)            # warm numpy caches
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        simulate_phase(machine, phase.src, phase.dst, phase.size,
+                       arrival_order=arrival)
+    us_cold = (time.perf_counter() - t0) / reps * 1e6
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        simulate(phase, arrival_order=arrival)
+    us_warm = (time.perf_counter() - t0) / reps * 1e6
+    n = phase.n_msgs
+    return [("sim_throughput_msgs_per_sec", us_cold, n / (us_cold * 1e-6)),
+            ("sim_throughput_prebuilt_msgs_per_sec", us_warm,
+             n / (us_warm * 1e-6))]
 
 
 def bench_queue_position_n2_over_3():
@@ -233,4 +270,5 @@ ALL_BENCHES = [
     bench_fig7_fig9_contention,
     bench_amg_spmv_spgemm,
     bench_queue_position_n2_over_3,
+    bench_simulator_throughput,
 ]

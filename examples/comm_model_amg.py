@@ -1,14 +1,15 @@
 """The paper's workflow, end to end: build an AMG hierarchy, extract the
-per-level communication patterns, price them with the model ladder, and
-compare against the mechanistic simulator ("measured").
+per-level communication patterns, bind them to a machine as CommPhases, price
+the whole hierarchy with the model ladder in one batched call, and compare
+against the mechanistic simulator ("measured").
 
     PYTHONPATH=src python examples/comm_model_amg.py
 """
 import numpy as np
 
-from repro.core import model_ladder, MODEL_LEVELS
+from repro.core import model_ladder_many, MODEL_LEVELS
 from repro.core.report import format_table
-from repro.net import blue_waters_machine, simulate_phase
+from repro.net import blue_waters_machine, simulate_many
 from repro.sparse import (elasticity_like_3d, build_hierarchy, RowPartition,
                           spmv_comm_pattern)
 
@@ -20,27 +21,27 @@ def main():
     print(f"elasticity-like operator: {A.shape[0]} dof, {A.nnz} nnz, "
           f"{len(levels)} AMG levels\n")
 
-    rows = []
-    rng = np.random.default_rng(0)
+    # one CommPhase per level: locality / protocol / routing endpoints /
+    # active-sender counts are computed once and shared by both sides
+    tagged = []
     for li, lvl in enumerate(levels):
         n_procs = min(512, max(lvl.A.n_rows // 2, 2))
         part = RowPartition.balanced(lvl.A.n_rows, n_procs)
         cp = spmv_comm_pattern(lvl.A, part)
         if cp.n_msgs == 0:
             continue
-        arrival = {int(p): rng.permutation(np.nonzero(cp.dst == p)[0])
-                   for p in np.unique(cp.dst)}
-        meas = simulate_phase(machine, cp.src, cp.dst, cp.size,
-                              arrival_order=arrival).time
-        lad = model_ladder(machine.params, cp.src, cp.dst, cp.size,
-                           machine.locality(cp.src, cp.dst),
-                           node_of=machine.node_of,
-                           n_torus_nodes=machine.torus.size,
-                           torus_ndim=3,
-                           procs_per_torus_node=machine.procs_per_torus_node,
-                           n_procs=cp.n_procs)
+        tagged.append((li, lvl, cp.bind(machine)))
+    phases = [ph for _, _, ph in tagged]
+
+    rng = np.random.default_rng(0)
+    arrivals = [ph.random_arrival_order(rng) for ph in phases]
+    results = simulate_many(phases, arrival_orders=arrivals)
+    ladders = model_ladder_many(phases)
+
+    rows = []
+    for (li, lvl, ph), res, lad in zip(tagged, results, ladders):
         row = {"level": li, "rows": lvl.A.n_rows,
-               "msgs/proc": cp.max_msgs_per_proc(), "measured": meas}
+               "msgs/proc": ph.max_msgs_per_proc(), "measured": res.time}
         for lvlname in MODEL_LEVELS:
             row[lvlname] = lad[lvlname].total
         rows.append(row)

@@ -1,0 +1,21 @@
+"""Unified vectorized communication-phase engine.
+
+One abstraction — :class:`CommPhase` — binds a point-to-point message set
+(src, dst, size) to a machine once, caching per-message locality, protocol
+class, torus endpoints and active-senders-per-node.  Both sides of the
+paper's inferential gap consume it: the closed-form model ladder
+(:func:`repro.core.models.phase_cost_many`) and the mechanistic event
+simulator (:func:`repro.net.simulator.simulate`).  The shared hot-path math
+lives in :mod:`repro.comm.primitives` (numpy-only, below both consumers).
+"""
+from .phase import CommPhase
+from .primitives import (active_senders_per_node, transport_times,
+                         per_proc_sums, group_by_receiver,
+                         queue_traversal_steps, batched_queue_traversal_steps)
+
+__all__ = [
+    "CommPhase",
+    "active_senders_per_node", "transport_times", "per_proc_sums",
+    "group_by_receiver", "queue_traversal_steps",
+    "batched_queue_traversal_steps",
+]

@@ -1,0 +1,190 @@
+"""CommPhase: one point-to-point communication phase bound to a machine.
+
+The paper evaluates every phase (a set of messages that are all posted, then
+all completed — an SpMV halo exchange, one direction of a HighVolumePingPong)
+twice: with the closed-form model ladder and with the mechanistic simulator.
+Both need the same derived quantities — per-message locality class, protocol
+class, sender node / torus-unit ids, and the number of actively-sending
+processes per node.  ``CommPhase`` computes all of them once, vectorized, at
+construction; :func:`repro.core.models.phase_cost_many` and
+:func:`repro.net.simulator.simulate` are thin layers over these cached arrays.
+
+The machine argument is duck-typed (anything with ``params``, ``torus``,
+``locality``, ``node_of``, ``torus_node_of`` — i.e.
+:class:`repro.net.MachineSpec`), which keeps this module numpy-only and below
+both consumers in the import layering.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import numpy as np
+
+from .primitives import batched_queue_traversal_steps, group_by_receiver
+from .primitives import active_senders_per_node
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class CommPhase:
+    """A message set (src, dst, size) with machine-derived arrays cached."""
+
+    machine: Any                 # MachineSpec (duck-typed)
+    src: np.ndarray              # [n_msgs] sending process
+    dst: np.ndarray              # [n_msgs] receiving process
+    size: np.ndarray             # [n_msgs] bytes
+    n_procs: int
+    loc: np.ndarray              # [n_msgs] locality class
+    proto: np.ndarray            # [n_msgs] protocol class
+    is_net: np.ndarray           # [n_msgs] traverses the network
+    send_node: np.ndarray        # [n_msgs] sender's node
+    torus_src: np.ndarray        # [n_msgs] sender's torus unit
+    torus_dst: np.ndarray        # [n_msgs] receiver's torus unit
+    active_ppn: np.ndarray       # [n_msgs] active senders on sender's node
+
+    @classmethod
+    def build(cls, machine, src, dst, size, n_procs: int | None = None) -> "CommPhase":
+        src = np.asarray(src, dtype=np.int64).ravel()
+        dst = np.asarray(dst, dtype=np.int64).ravel()
+        size = np.asarray(size, dtype=np.float64).ravel()
+        params = machine.params
+        loc = np.asarray(machine.locality(src, dst), dtype=np.int64)
+        proto = params.protocol_of(size)
+        is_net = loc >= params.network_locality
+        send_node = np.asarray(machine.node_of(src), dtype=np.int64)
+        if n_procs is None:
+            n_procs = int(max(src.max(initial=-1), dst.max(initial=-1))) + 1
+        return cls(
+            machine=machine, src=src, dst=dst, size=size, n_procs=int(n_procs),
+            loc=loc, proto=proto, is_net=is_net, send_node=send_node,
+            torus_src=np.asarray(machine.torus_node_of(src), dtype=np.int64),
+            torus_dst=np.asarray(machine.torus_node_of(dst), dtype=np.int64),
+            active_ppn=active_senders_per_node(src, send_node, is_net),
+        )
+
+    # -- basic stats --------------------------------------------------------
+    @property
+    def n_msgs(self) -> int:
+        return int(self.src.size)
+
+    @property
+    def total_bytes(self) -> float:
+        return float(self.size.sum())
+
+    @property
+    def net_bytes(self) -> float:
+        return float(self.size[self.is_net].sum())
+
+    def recv_counts(self) -> np.ndarray:
+        return np.bincount(self.dst, minlength=self.n_procs)
+
+    def max_msgs_per_proc(self) -> int:
+        if self.n_msgs == 0:
+            return 0
+        return int(self.recv_counts().max())
+
+    # -- receive-queue accounting -------------------------------------------
+    @functools.cached_property
+    def _receiver_groups(self) -> tuple[np.ndarray, np.ndarray]:
+        # cached_property writes straight to __dict__, bypassing the frozen
+        # dataclass __setattr__ — the grouping is derived state like the rest
+        return group_by_receiver(self.dst, self.n_procs)
+
+    def receiver_groups(self) -> tuple[np.ndarray, np.ndarray]:
+        """(order, bounds): message indices grouped by receiving process."""
+        return self._receiver_groups
+
+    def queue_steps(self, recv_post_order=None, arrival_order=None) -> np.ndarray:
+        """Exact per-process receive-queue traversal-step totals.
+
+        ``recv_post_order[p]`` / ``arrival_order[p]``: permutations of the
+        message indices destined to ``p``, giving the order receives are
+        posted and envelopes arrive.  Default is array order for both (best
+        case: every arrival matches the queue head, n steps total); receivers
+        with a custom order pay the exact Fenwick walk, batched across all of
+        them in one sweep.
+        """
+        if self.n_msgs == 0:
+            return np.zeros(self.n_procs, dtype=np.int64)
+        order, bounds = self.receiver_groups()
+        counts = np.diff(bounds)
+        qsteps = counts.astype(np.int64).copy()   # default order: 1 step/arrival
+        custom = sorted({int(p) for p in (recv_post_order or ())}
+                        | {int(p) for p in (arrival_order or ())})
+        custom = [p for p in custom if 0 <= p < self.n_procs and counts[p] > 0]
+        if not custom:
+            return qsteps
+        # local index of every message within its receiver group
+        local = np.empty(self.n_msgs, dtype=np.int64)
+        local[order] = np.arange(self.n_msgs) - np.repeat(bounds[:-1], counts)
+        posted_parts, arrive_parts, cbounds = [], [], [0]
+        for p in custom:
+            n = int(counts[p])
+            posted_parts.append(self._local_perm(recv_post_order, p, local, n))
+            arrive_parts.append(self._local_perm(arrival_order, p, local, n))
+            cbounds.append(cbounds[-1] + n)
+        steps = batched_queue_traversal_steps(np.concatenate(posted_parts),
+                                              np.concatenate(arrive_parts),
+                                              np.asarray(cbounds))
+        qsteps[custom] = np.add.reduceat(steps, np.asarray(cbounds[:-1]))
+        return qsteps
+
+    def _local_perm(self, orders, p: int, local: np.ndarray, n: int) -> np.ndarray:
+        """Map receiver ``p``'s order entry to region-local indices, loudly
+        rejecting message indices not destined to ``p``."""
+        ids = orders.get(p) if orders else None
+        if ids is None:
+            return np.arange(n)
+        ids = np.asarray(ids, dtype=np.int64)
+        if (ids.size != n or np.unique(ids).size != n
+                or np.any(self.dst[ids] != p)):
+            raise ValueError(
+                f"order for receiver {p} must be a permutation of the "
+                f"{n} message indices destined to it")
+        return local[ids]
+
+    def random_arrival_order(self, rng: np.random.Generator) -> dict[int, np.ndarray]:
+        """Random envelope-arrival permutation per receiver (the paper's
+        Sec.-5 irregular regime: matches land at ~n^2/3 queue positions)."""
+        order, bounds = self.receiver_groups()
+        out: dict[int, np.ndarray] = {}
+        for p in range(self.n_procs):
+            ids = order[bounds[p]:bounds[p + 1]]
+            if ids.size:
+                out[p] = rng.permutation(ids)
+        return out
+
+    # -- link contention ----------------------------------------------------
+    def link_contention(self) -> tuple[float, float]:
+        """(hottest contended-link bytes, total network bytes).
+
+        Routes every inter-torus-unit network message dimension-ordered over
+        the machine torus in one vectorized expansion.  A single unit's flows
+        over one link are already bounded by its injection cap R_N, so only
+        bytes *beyond the largest single-source contribution* on a link count
+        as contention (multiple units funneling into it, as in the paper's
+        Fig. 6 G1-G2 link).
+        """
+        net_bytes = self.net_bytes
+        sel = self.is_net & (self.torus_src != self.torus_dst)
+        if not sel.any():
+            return 0.0, net_bytes
+        torus = self.machine.torus
+        tsrc = self.torus_src[sel]
+        midx, link = torus.route_link_ids(tsrc, self.torus_dst[sel])
+        if link.size == 0:
+            return 0.0, net_bytes
+        w = self.size[sel][midx]
+        # span must cover every source id: on torus_over_procs machines a
+        # process id can exceed the torus size, and a too-small span would
+        # bleed source bits into the link field
+        span = np.int64(max(torus.size, int(tsrc.max()) + 1))
+        key = link * span + tsrc[midx]
+        uk, inv = np.unique(key, return_inverse=True)
+        per_src = np.bincount(inv, weights=w)     # bytes per (link, source)
+        pair_link = uk // span
+        starts = np.nonzero(np.r_[True, pair_link[1:] != pair_link[:-1]])[0]
+        totals = np.add.reduceat(per_src, starts)
+        largest = np.maximum.reduceat(per_src, starts)
+        return float((totals - largest).max(initial=0.0)), net_bytes

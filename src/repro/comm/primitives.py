@@ -1,0 +1,199 @@
+"""Vectorized primitives shared by the model ladder and the event simulator.
+
+Both sides of the paper's model/measurement gap — the closed-form models in
+:mod:`repro.core.models` and the mechanistic simulator in
+:mod:`repro.net.simulator` — need the same per-phase quantities: how many
+processes on each node are actively injecting into the network, what the
+max-rate transport time of each message is, and how many receive-queue slots
+each envelope walks.  This module computes all of them with array ops
+(``np.unique`` / ``bincount`` / batched Fenwick rounds) so neither consumer
+keeps a per-message Python loop.
+
+Imports numpy only: it sits *below* both ``repro.core`` and ``repro.net`` in
+the layering, so either package can build on it without import cycles.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+# -- active senders per node -------------------------------------------------
+
+def active_senders_per_node(src, node, is_net) -> np.ndarray:
+    """Per-message count of actively-communicating processes on the sender's node.
+
+    A process is *active* on its node if it sends at least one network-class
+    message; every network message then contends with its node's active-sender
+    count for injection bandwidth (the max-rate mechanism).  Non-network
+    messages get 1.  Computed via ``np.unique`` over (node, sender) pairs —
+    no dict-of-sets walk.
+    """
+    src = np.asarray(src, dtype=np.int64)
+    node = np.asarray(node, dtype=np.int64)
+    is_net = np.asarray(is_net, dtype=bool)
+    ppn = np.ones(src.shape, dtype=np.float64)
+    if src.size == 0 or not is_net.any():
+        return ppn
+    nd, sp = node[is_net], src[is_net]
+    span = np.int64(sp.max()) + 1
+    pair_node = np.unique(nd * span + sp) // span     # distinct (node, sender)
+    nodes_u, senders = np.unique(pair_node, return_counts=True)
+    ppn[is_net] = senders[np.searchsorted(nodes_u, nd)]
+    return ppn
+
+
+# -- max-rate message pricing ------------------------------------------------
+
+def transport_times(size, alpha, Rb, RN, ppn, is_net,
+                    use_maxrate: bool = True) -> np.ndarray:
+    """Per-message transport time under the (node-aware) max-rate model.
+
+    ``alpha``/``Rb``/``RN`` are the already-indexed per-message parameter
+    arrays (locality x protocol lookup done by the caller, which owns the
+    table layout).  Only network-class messages (``is_net``) contend for the
+    node injection cap ``RN``; with ``use_maxrate=False`` the cap is ignored
+    (pure postal model).
+    """
+    size = np.asarray(size, dtype=np.float64)
+    if not use_maxrate:
+        return alpha + size / Rb
+    eff = np.where(np.asarray(is_net, dtype=bool),
+                   np.maximum(np.asarray(ppn, dtype=np.float64), 1.0), 1.0)
+    rate = np.minimum(RN, eff * Rb)
+    return alpha + eff * size / rate
+
+
+def per_proc_sums(idx, values, n: int) -> np.ndarray:
+    """Sum ``values`` into ``n`` bins by ``idx`` (send-side transport sums)."""
+    return np.bincount(np.asarray(idx, dtype=np.int64),
+                       weights=np.asarray(values, dtype=np.float64),
+                       minlength=n)
+
+
+def group_by_receiver(dst, n_procs: int) -> tuple[np.ndarray, np.ndarray]:
+    """Stable grouping of message indices by destination process.
+
+    Returns ``(order, bounds)``: ``order[bounds[p]:bounds[p+1]]`` are the
+    indices of messages destined to process ``p``, in posting (array) order.
+    """
+    dst = np.asarray(dst, dtype=np.int64)
+    order = np.argsort(dst, kind="stable")
+    bounds = np.searchsorted(dst[order], np.arange(n_procs + 1))
+    return order, bounds
+
+
+# -- receive-queue walk ------------------------------------------------------
+
+class _Fenwick:
+    """Binary indexed tree over n slots holding 0/1 'still unmatched' flags."""
+
+    def __init__(self, n: int):
+        self.n = n
+        idx = np.arange(n + 1, dtype=np.int64)
+        self.t = idx & -idx          # prefix tree of all-ones
+        self.t[0] = 0
+
+    def _add(self, i: int, v: int) -> None:
+        while i <= self.n:
+            self.t[i] += v
+            i += i & -i
+
+    def prefix(self, i: int) -> int:
+        s = 0
+        while i > 0:
+            s += self.t[i]
+            i -= i & -i
+        return int(s)
+
+    def remove(self, i: int) -> None:
+        self._add(i, -1)
+
+
+def queue_traversal_steps(posted_order, arrival_order) -> np.ndarray:
+    """Exact queue-walk lengths for one receiving process (reference Fenwick).
+
+    ``posted_order[k]`` = message id posted k-th; ``arrival_order[j]`` =
+    message id of the j-th arriving envelope.  Returns steps per arrival: the
+    1-based position of the match in the still-unmatched posted queue —
+    exactly what CrayMPI's linear receive-queue search pays.
+
+    This is the scalar per-process reference; the simulator uses
+    :func:`batched_queue_traversal_steps` across all receivers at once.
+    """
+    posted_order = np.asarray(posted_order)
+    n = len(posted_order)
+    pos = np.empty(n, dtype=np.int64)
+    pos[posted_order] = np.arange(n)
+    fen = _Fenwick(n)
+    steps = np.empty(n, dtype=np.int64)
+    for j, mid in enumerate(np.asarray(arrival_order)):
+        p = int(pos[mid]) + 1               # 1-based slot
+        steps[j] = fen.prefix(p)            # unmatched entries at/before slot
+        fen.remove(p)
+    return steps
+
+
+def _prefix_many(tree: np.ndarray, i: np.ndarray) -> np.ndarray:
+    """Fenwick prefix sums for an array of 1-based indices."""
+    i = np.array(i, dtype=np.int64, copy=True)
+    out = np.zeros(i.shape, dtype=np.int64)
+    while True:
+        m = i > 0
+        if not m.any():
+            return out
+        im = i[m]
+        out[m] += tree[im]
+        i[m] = im - (im & -im)
+
+
+def _add_many(tree: np.ndarray, i: np.ndarray, v: int) -> None:
+    """Fenwick point updates for an array of distinct 1-based indices."""
+    n = tree.size - 1
+    i = np.array(i, dtype=np.int64, copy=True)
+    while True:
+        m = i <= n
+        if not m.any():
+            return
+        im = i[m]
+        np.add.at(tree, im, v)              # ancestors may collide across slots
+        i[m] = im + (im & -im)
+
+
+def batched_queue_traversal_steps(posted, arrival, bounds) -> np.ndarray:
+    """Queue-walk lengths for many receiving processes in one Fenwick sweep.
+
+    Region ``r`` (one receiver) occupies slots ``bounds[r]:bounds[r+1]`` of
+    the concatenated ``posted`` / ``arrival`` arrays, which hold region-local
+    message indices.  Returns per-arrival steps in the same layout — equal to
+    stacking :func:`queue_traversal_steps` per region, but all regions advance
+    in lock-step: one round per arrival *depth*, each round a vectorized
+    prefix/remove over every still-active receiver.  Python-level work is
+    O(max msgs-per-receiver * log N) instead of O(total messages).
+    """
+    posted = np.asarray(posted, dtype=np.int64)
+    arrival = np.asarray(arrival, dtype=np.int64)
+    bounds = np.asarray(bounds, dtype=np.int64)
+    N = int(posted.size)
+    steps = np.zeros(N, dtype=np.int64)
+    if N == 0:
+        return steps
+    starts = bounds[:-1]
+    counts = np.diff(bounds)
+    region_of = np.repeat(np.arange(counts.size), counts)
+    start_of = starts[region_of]
+    pos = np.empty(N, dtype=np.int64)                 # local id -> local slot
+    pos[start_of + posted] = np.arange(N) - start_of
+    idx = np.arange(N + 1, dtype=np.int64)
+    tree = idx & -idx                                 # all-ones Fenwick
+    tree[0] = 0
+    regions = np.nonzero(counts)[0]
+    for j in range(int(counts.max())):
+        act = regions[counts[regions] > j]
+        if act.size == 0:
+            break
+        s = starts[act]
+        mid = arrival[s + j]                          # j-th arrival per region
+        p = s + pos[s + mid] + 1                      # global 1-based slot
+        steps[s + j] = _prefix_many(tree, p) - _prefix_many(tree, s)
+        _add_many(tree, p, -1)
+    return steps

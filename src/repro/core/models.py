@@ -22,6 +22,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.comm.primitives import active_senders_per_node, transport_times
+
 from .params import CommParams
 from .topology import contention_ell
 
@@ -60,15 +62,12 @@ def message_time(params: CommParams, size, loc, ppn=1, node_aware: bool = True,
     proto = params.protocol_of(size)
     alpha = params.alpha[loc, proto]
     Rb = params.Rb[loc, proto]
-    if use_maxrate:
-        ppn = np.asarray(ppn, dtype=np.float64)
-        RN = params.RN[loc, proto]
-        # only network-class messages contend for injection bandwidth
-        is_net = loc >= params.network_locality
-        eff_ppn = np.where(is_net, np.maximum(ppn, 1.0), 1.0)
-        rate = np.minimum(RN, eff_ppn * Rb)
-        return alpha + eff_ppn * size / rate
-    return alpha + size / Rb
+    if not use_maxrate:
+        return transport_times(size, alpha, Rb, None, 1.0, False,
+                               use_maxrate=False)
+    # only network-class messages contend for injection bandwidth
+    return transport_times(size, alpha, Rb, params.RN[loc, proto], ppn,
+                           loc >= params.network_locality)
 
 
 def queue_time(params: CommParams, n_messages) -> np.ndarray:
@@ -87,20 +86,17 @@ def contention_time(params: CommParams, n_torus_nodes: int, torus_ndim: int,
 
 # -- phase-level aggregation ------------------------------------------------
 
-def _active_ppn(src, loc, node_of, network_locality: int) -> np.ndarray:
-    """Per-message count of actively-communicating processes on the sender's node."""
-    src = np.asarray(src)
-    loc = np.asarray(loc)
-    nodes = np.asarray([node_of(int(p)) for p in src], dtype=np.int64) if callable(node_of) \
-        else np.asarray(node_of)[src]
-    is_net = loc >= network_locality
-    active: dict[int, set] = {}
-    for p, nd, n in zip(src, nodes, is_net):
-        if n:
-            active.setdefault(int(nd), set()).add(int(p))
-    counts = {nd: len(ps) for nd, ps in active.items()}
-    return np.asarray([counts.get(int(nd), 1) if n else 1
-                       for nd, n in zip(nodes, is_net)], dtype=np.float64)
+def _sender_nodes(src: np.ndarray, node_of) -> np.ndarray:
+    """Resolve a process->node map (array or callable) to per-message nodes."""
+    if callable(node_of):
+        try:
+            nodes = np.asarray(node_of(src), dtype=np.int64)
+            if nodes.shape != src.shape:
+                raise TypeError
+        except (TypeError, ValueError):   # scalar-only callable fallback
+            nodes = np.asarray([node_of(int(p)) for p in src], dtype=np.int64)
+        return nodes
+    return np.asarray(node_of, dtype=np.int64)[src]
 
 
 def phase_cost(params: CommParams, src, dst, size, loc, *,
@@ -109,7 +105,8 @@ def phase_cost(params: CommParams, src, dst, size, loc, *,
                torus_ndim: int = 3,
                procs_per_torus_node: int = 1,
                n_procs: int | None = None,
-               level: str = "contention") -> CostBreakdown:
+               level: str = "contention",
+               active_ppn=None) -> CostBreakdown:
     """Model the cost of one communication phase (e.g. one SpMV halo exchange).
 
     Parameters
@@ -118,6 +115,8 @@ def phase_cost(params: CommParams, src, dst, size, loc, *,
     node_of : process -> node map (callable or array); required for max-rate.
     n_torus_nodes, torus_ndim, procs_per_torus_node : contention geometry.
     level : which rung of the model ladder to evaluate (``MODEL_LEVELS``).
+    active_ppn : precomputed active-senders-per-node array (e.g. the cached
+        ``CommPhase.active_ppn``); skips the ``node_of`` recomputation.
     """
     if level not in MODEL_LEVELS:
         raise ValueError(f"unknown model level {level!r}")
@@ -131,8 +130,11 @@ def phase_cost(params: CommParams, src, dst, size, loc, *,
     if src.size == 0:
         return CostBreakdown(0.0, 0.0, 0.0, 0.0)
 
-    if use_maxrate and node_of is not None:
-        ppn = _active_ppn(src, loc, node_of, params.network_locality)
+    if use_maxrate and active_ppn is not None:
+        ppn = np.asarray(active_ppn, dtype=np.float64)
+    elif use_maxrate and node_of is not None:
+        ppn = active_senders_per_node(src, _sender_nodes(src, node_of),
+                                      loc >= params.network_locality)
     else:
         ppn = np.ones_like(size)
     t_msg = message_time(params, size, loc, ppn=ppn, node_aware=node_aware,
@@ -140,8 +142,7 @@ def phase_cost(params: CommParams, src, dst, size, loc, *,
 
     # transport: worst process over (send-side sums)
     n_procs = int(n_procs if n_procs is not None else max(src.max(), dst.max()) + 1)
-    per_proc = np.zeros(n_procs)
-    np.add.at(per_proc, src, t_msg)
+    per_proc = np.bincount(src, weights=t_msg, minlength=n_procs)
     transport = float(per_proc.max())
 
     queue = 0.0
@@ -165,3 +166,44 @@ def model_ladder(params: CommParams, src, dst, size, loc, **kw) -> dict[str, Cos
     """Evaluate every model level on the same phase (for accuracy tables)."""
     return {lvl: phase_cost(params, src, dst, size, loc, level=lvl, **kw)
             for lvl in MODEL_LEVELS}
+
+
+# -- batched entry points over CommPhase objects ----------------------------
+
+def phase_cost_phase(phase, level: str = "contention",
+                     params: CommParams | None = None) -> CostBreakdown:
+    """Price one bound :class:`repro.comm.CommPhase` (duck-typed).
+
+    Locality, active-sender counts and contention geometry all come from the
+    phase's cached arrays and machine; ``params`` overrides the machine's
+    ground-truth table (e.g. with a fitted one) while keeping the machine's
+    locality classification.
+    """
+    m = phase.machine
+    p = params if params is not None else m.params
+    if p.network_locality == m.params.network_locality:
+        ppn = phase.active_ppn
+    else:
+        # the cached counts were gated on the machine's network locality;
+        # an override that reclassifies localities needs them recomputed
+        ppn = active_senders_per_node(phase.src, phase.send_node,
+                                      phase.loc >= p.network_locality)
+    return phase_cost(p, phase.src, phase.dst, phase.size, phase.loc,
+                      n_torus_nodes=m.torus.size, torus_ndim=m.torus.ndim,
+                      procs_per_torus_node=m.procs_per_torus_node,
+                      n_procs=phase.n_procs, level=level,
+                      active_ppn=ppn)
+
+
+def phase_cost_many(phases, level: str = "contention",
+                    params: CommParams | None = None) -> list[CostBreakdown]:
+    """Price a whole sweep of phases (an AMG hierarchy, a partition or
+    machine scan) in one call, reusing each phase's cached arrays."""
+    return [phase_cost_phase(ph, level=level, params=params) for ph in phases]
+
+
+def model_ladder_many(phases, params: CommParams | None = None
+                      ) -> list[dict[str, CostBreakdown]]:
+    """Evaluate the full model ladder on a sweep of phases."""
+    return [{lvl: phase_cost_phase(ph, level=lvl, params=params)
+             for lvl in MODEL_LEVELS} for ph in phases]

@@ -69,6 +69,69 @@ class TorusTopology:
         return total
 
     # -- routing ----------------------------------------------------------
+    @property
+    def link_slots(self) -> int:
+        """Size of the dense link-id space: link (node, dim) <-> node*ndim+dim."""
+        return self.size * self.ndim
+
+    def _strides(self) -> np.ndarray:
+        s = np.ones(self.ndim, dtype=np.int64)
+        for i in range(self.ndim - 2, -1, -1):
+            s[i] = s[i + 1] * self.dims[i + 1]
+        return s
+
+    def route_link_ids(self, a, b) -> tuple[np.ndarray, np.ndarray]:
+        """Vectorized dimension-ordered routing over message arrays.
+
+        For messages ``a[k] -> b[k]``, emit every traversed link as a pair
+        ``(message index k, dense link id node*ndim + dim)``; the id names the
+        undirected link between ``node`` and its +1 neighbour along ``dim`` —
+        the same normalization as :meth:`route_links`.  One per-dimension
+        segment expansion replaces the per-message hop loop: all messages'
+        hops along dimension ``i`` are emitted at once with coordinates
+        ``dims < i`` already at the destination and ``dims > i`` still at the
+        source.
+        """
+        a = np.atleast_1d(np.asarray(a, dtype=np.int64))
+        b = np.atleast_1d(np.asarray(b, dtype=np.int64))
+        ca, cb = self.coords(a), self.coords(b)
+        strides = self._strides()
+        n = a.size
+        msg_parts: list[np.ndarray] = []
+        link_parts: list[np.ndarray] = []
+        for i in range(self.ndim):
+            delta = np.asarray(self._dim_delta(ca[:, i], cb[:, i], i))
+            hops = np.abs(delta)
+            total = int(hops.sum())
+            if total == 0:
+                continue
+            msg = np.repeat(np.arange(n), hops)
+            first = np.cumsum(hops) - hops
+            k = np.arange(total) - np.repeat(first, hops)   # 0..hops-1 per msg
+            down = np.repeat(delta < 0, hops)
+            c0 = np.repeat(ca[:, i], hops)
+            # +1 steps own the link at the pre-step coord; -1 steps at the
+            # post-step coord (normalized to the lower-coordinate node)
+            coord = np.where(down, c0 - k - 1, c0 + k) % self.dims[i]
+            base = np.zeros(n, dtype=np.int64)
+            for j in range(self.ndim):
+                if j != i:
+                    cj = cb[:, j] if j < i else ca[:, j]
+                    base = base + cj * strides[j]
+            node = np.repeat(base, hops) + coord * strides[i]
+            msg_parts.append(msg)
+            link_parts.append(node * self.ndim + i)
+        if not msg_parts:
+            z = np.zeros(0, dtype=np.int64)
+            return z, z.copy()
+        return np.concatenate(msg_parts), np.concatenate(link_parts)
+
+    def link_bytes(self, srcs, dsts, sizes) -> np.ndarray:
+        """Dense per-link byte totals (length ``link_slots``) for a message set."""
+        sizes = np.atleast_1d(np.asarray(sizes, dtype=np.float64))
+        midx, link = self.route_link_ids(srcs, dsts)
+        return np.bincount(link, weights=sizes[midx], minlength=self.link_slots)
+
     def route_links(self, a: int, b: int) -> list[tuple[int, int, int]]:
         """Dimension-ordered route from rank a to rank b.
 
@@ -93,14 +156,14 @@ class TorusTopology:
         return links
 
     def accumulate_link_bytes(self, srcs, dsts, sizes) -> dict[tuple[int, int, int], float]:
-        """Route every (src, dst, size) message; return per-link byte totals."""
-        acc: dict[tuple[int, int, int], float] = {}
-        for s, d, z in zip(np.asarray(srcs), np.asarray(dsts), np.asarray(sizes)):
-            if s == d:
-                continue
-            for link in self.route_links(int(s), int(d)):
-                acc[link] = acc.get(link, 0.0) + float(z)
-        return acc
+        """Route every (src, dst, size) message; return per-link byte totals.
+
+        Dict view of :meth:`link_bytes`, keyed ``(node, dim, +1)`` like
+        :meth:`route_links` output.
+        """
+        dense = self.link_bytes(srcs, dsts, sizes)
+        return {(int(lid) // self.ndim, int(lid) % self.ndim, 1): float(dense[lid])
+                for lid in np.nonzero(dense)[0]}
 
 
 # -- the paper's cube-partition estimate -----------------------------------

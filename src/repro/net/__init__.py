@@ -8,7 +8,7 @@ queues, and routes bytes over a torus with per-link accounting.  The model in
 inferential gap the paper has between closed-form model and machine.
 """
 from .machine import MachineSpec, blue_waters_machine, tpu_v5e_machine
-from .simulator import PhaseResult, simulate_phase
+from .simulator import PhaseResult, simulate, simulate_phase, simulate_many
 from .pingpong import (
     pingpong_time, pingpong_sweep, ppn_sweep, high_volume_pingpong,
     contention_line_test,
@@ -16,7 +16,7 @@ from .pingpong import (
 
 __all__ = [
     "MachineSpec", "blue_waters_machine", "tpu_v5e_machine",
-    "PhaseResult", "simulate_phase",
+    "PhaseResult", "simulate", "simulate_phase", "simulate_many",
     "pingpong_time", "pingpong_sweep", "ppn_sweep", "high_volume_pingpong",
     "contention_line_test",
 ]

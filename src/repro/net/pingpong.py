@@ -82,13 +82,9 @@ def high_volume_pingpong(machine: MachineSpec, pairs, n: int, size: float,
     arrival walks the whole remaining queue (O(n^2), paper Fig. 4 right).
     Returns (total time, phase a->b, phase b->a).
     """
-    pairs = list(pairs)
-    src, dst = [], []
-    for a, b in pairs:
-        src += [a] * n
-        dst += [b] * n
-    src = np.asarray(src)
-    dst = np.asarray(dst)
+    pairs = np.asarray(list(pairs), dtype=np.int64).reshape(-1, 2)
+    src = np.repeat(pairs[:, 0], n)
+    dst = np.repeat(pairs[:, 1], n)
     sizes = np.full(src.shape, float(size))
     rng = np.random.default_rng(seed)
 

@@ -10,13 +10,17 @@ HighVolumePingPong):
 * the MPI receive queue is simulated: each process posts receives in a given
   order, envelopes arrive in network order, and every arrival walks the posted
   queue until it matches — traversal steps are counted exactly (Fenwick tree,
-  O(n log n)) and priced at gamma per step;
-* network messages are routed dimension-ordered over the torus; per-link byte
-  counters feed a contention penalty of delta * (hottest-link bytes).
+  batched across all receiving processes) and priced at gamma per step;
+* network messages are routed dimension-ordered over the torus in one
+  vectorized segment expansion; per-link byte counters feed a contention
+  penalty of delta * (hottest-link contended bytes).
 
-The closed-form model of :mod:`repro.core.models` must predict these outputs
-across the same inferential gap the paper has between model and machine
-(cube-partition estimate vs real routing, n^2 upper bound vs actual traversal).
+All hot paths are thin layers over the shared engine in :mod:`repro.comm`:
+:class:`repro.comm.CommPhase` caches locality / protocol / routing endpoints /
+active-sender counts once, and the same primitives also feed the closed-form
+model of :mod:`repro.core.models`, which must predict these outputs across the
+same inferential gap the paper has between model and machine (cube-partition
+estimate vs real routing, n^2 upper bound vs actual traversal).
 """
 from __future__ import annotations
 
@@ -24,52 +28,14 @@ import dataclasses
 
 import numpy as np
 
+from repro.comm import CommPhase
+from repro.comm.primitives import (per_proc_sums, queue_traversal_steps,
+                                   transport_times)
+
 from .machine import MachineSpec
 
-
-class _Fenwick:
-    """Binary indexed tree over n slots holding 0/1 'still unmatched' flags."""
-
-    def __init__(self, n: int):
-        self.n = n
-        self.t = np.zeros(n + 1, dtype=np.int64)
-        for i in range(1, n + 1):
-            self._add(i, 1)
-
-    def _add(self, i: int, v: int) -> None:
-        while i <= self.n:
-            self.t[i] += v
-            i += i & -i
-
-    def prefix(self, i: int) -> int:
-        s = 0
-        while i > 0:
-            s += self.t[i]
-            i -= i & -i
-        return int(s)
-
-    def remove(self, i: int) -> None:
-        self._add(i, -1)
-
-
-def queue_traversal_steps(posted_order: np.ndarray, arrival_order: np.ndarray) -> np.ndarray:
-    """Exact queue-walk lengths for one receiving process.
-
-    ``posted_order[k]`` = message id posted k-th; ``arrival_order[j]`` =
-    message id of the j-th arriving envelope.  Returns steps per arrival: the
-    1-based position of the match in the still-unmatched posted queue —
-    exactly what CrayMPI's linear receive-queue search pays.
-    """
-    n = len(posted_order)
-    pos = np.empty(n, dtype=np.int64)
-    pos[np.asarray(posted_order)] = np.arange(n)
-    fen = _Fenwick(n)
-    steps = np.empty(n, dtype=np.int64)
-    for j, mid in enumerate(np.asarray(arrival_order)):
-        p = int(pos[mid]) + 1               # 1-based slot
-        steps[j] = fen.prefix(p)            # unmatched entries at/before slot
-        fen.remove(p)
-    return steps
+__all__ = ["PhaseResult", "simulate", "simulate_phase", "simulate_many",
+           "queue_traversal_steps"]
 
 
 @dataclasses.dataclass
@@ -84,92 +50,38 @@ class PhaseResult:
     total_net_bytes: float
 
 
-def simulate_phase(machine: MachineSpec, src, dst, size,
-                   recv_post_order: dict[int, np.ndarray] | None = None,
-                   arrival_order: dict[int, np.ndarray] | None = None,
-                   rng: np.random.Generator | None = None,
-                   noise: float = 0.0) -> PhaseResult:
-    """Simulate one phase of point-to-point messages.
+def simulate(phase: CommPhase,
+             recv_post_order: dict[int, np.ndarray] | None = None,
+             arrival_order: dict[int, np.ndarray] | None = None,
+             rng: np.random.Generator | None = None,
+             noise: float = 0.0) -> PhaseResult:
+    """Simulate one prebuilt :class:`CommPhase`.
 
     ``recv_post_order[p]`` / ``arrival_order[p]``: permutations of the indices
     (into src/dst/size) of messages destined to process ``p``, giving the
     order receives are posted and envelopes arrive.  Default: array order for
     both (best case, O(n) queue cost).
     """
-    src = np.asarray(src, dtype=np.int64)
-    dst = np.asarray(dst, dtype=np.int64)
-    size = np.asarray(size, dtype=np.float64)
-    params = machine.params
-    n_procs = int(max(src.max(initial=0), dst.max(initial=0))) + 1 if src.size else 0
-    if src.size == 0:
+    if phase.n_msgs == 0:
         z = np.zeros(0)
         return PhaseResult(0.0, 0.0, 0.0, 0.0, z, z, 0.0, 0.0)
-
-    loc = machine.locality(src, dst)
-    proto = params.protocol_of(size)
-    is_net = loc >= params.network_locality
+    params = phase.machine.params
 
     # --- max-rate transport: actual active senders per node ----------------
-    send_node = machine.node_of(src)
-    active: dict[int, set[int]] = {}
-    for p, nd, n in zip(src, send_node, is_net):
-        if n:
-            active.setdefault(int(nd), set()).add(int(p))
-    ppn = np.asarray([len(active.get(int(nd), ())) if n else 1
-                      for nd, n in zip(send_node, is_net)], dtype=np.float64)
-    ppn = np.maximum(ppn, 1.0)
-
-    alpha = params.alpha[loc, proto]
-    Rb = params.Rb[loc, proto]
-    RN = params.RN[loc, proto]
-    rate = np.minimum(RN, ppn * Rb)
-    t_msg = alpha + ppn * size / rate
-
-    per_proc = np.zeros(n_procs)
-    np.add.at(per_proc, src, t_msg)
+    alpha = params.alpha[phase.loc, phase.proto]
+    Rb = params.Rb[phase.loc, phase.proto]
+    RN = params.RN[phase.loc, phase.proto]
+    t_msg = transport_times(phase.size, alpha, Rb, RN, phase.active_ppn,
+                            phase.is_net)
+    per_proc = per_proc_sums(phase.src, t_msg, phase.n_procs)
     transport = float(per_proc.max())
 
-    # --- queue search (exact traversal counts) ----------------------------
-    qsteps = np.zeros(n_procs, dtype=np.int64)
-    recv_ids: dict[int, np.ndarray] = {}
-    order = np.argsort(dst, kind="stable")
-    bounds = np.searchsorted(dst[order], np.arange(n_procs + 1))
-    for p in range(n_procs):
-        ids = order[bounds[p]:bounds[p + 1]]
-        if ids.size:
-            recv_ids[p] = ids
-    for p, ids in recv_ids.items():
-        n = ids.size
-        local = {mid: k for k, mid in enumerate(ids)}
-        posted = (np.asarray([local[m] for m in recv_post_order[p]])
-                  if recv_post_order and p in recv_post_order
-                  else np.arange(n))
-        arrive = (np.asarray([local[m] for m in arrival_order[p]])
-                  if arrival_order and p in arrival_order
-                  else np.arange(n))
-        steps = queue_traversal_steps(posted, arrive)
-        qsteps[p] = int(steps.sum())
+    # --- queue search (exact traversal counts, batched Fenwick) ------------
+    qsteps = phase.queue_steps(recv_post_order, arrival_order)
     queue = params.gamma * float(qsteps.max(initial=0))
 
-    # --- link contention (actual dimension-ordered routing) ---------------
-    # A single node's flows over one link are already bounded by its injection
-    # cap R_N, so only bytes *beyond the largest single-source contribution*
-    # on a link constitute contention (multiple nodes funneling into it, as in
-    # the paper's Fig. 6 G1-G2 link).
-    tsrc = machine.torus_node_of(src)
-    tdst = machine.torus_node_of(dst)
-    net = is_net & (tsrc != tdst)
-    link_total: dict[tuple, float] = {}
-    link_by_src: dict[tuple, dict[int, float]] = {}
-    for s_, d_, z_ in zip(tsrc[net], tdst[net], size[net]):
-        for link in machine.torus.route_links(int(s_), int(d_)):
-            link_total[link] = link_total.get(link, 0.0) + float(z_)
-            link_by_src.setdefault(link, {})
-            link_by_src[link][int(s_)] = link_by_src[link].get(int(s_), 0.0) + float(z_)
-    max_link = 0.0
-    for link, tot in link_total.items():
-        contended = tot - max(link_by_src[link].values())
-        max_link = max(max_link, contended)
+    # --- link contention (actual dimension-ordered routing) ----------------
+    max_link, net_bytes = phase.link_contention()
     contention = params.delta * max_link
 
     total = transport + queue + contention
@@ -177,4 +89,38 @@ def simulate_phase(machine: MachineSpec, src, dst, size,
         rng = rng or np.random.default_rng(0)
         total *= float(np.exp(rng.normal(0.0, noise)))
     return PhaseResult(total, transport, queue, contention,
-                       per_proc, qsteps, max_link, float(size[is_net].sum()))
+                       per_proc, qsteps, max_link, net_bytes)
+
+
+def simulate_phase(machine: MachineSpec, src, dst, size,
+                   recv_post_order: dict[int, np.ndarray] | None = None,
+                   arrival_order: dict[int, np.ndarray] | None = None,
+                   rng: np.random.Generator | None = None,
+                   noise: float = 0.0) -> PhaseResult:
+    """Simulate one phase of point-to-point messages (array-level entry)."""
+    return simulate(CommPhase.build(machine, src, dst, size),
+                    recv_post_order=recv_post_order,
+                    arrival_order=arrival_order, rng=rng, noise=noise)
+
+
+def simulate_many(phases,
+                  recv_post_orders=None,
+                  arrival_orders=None,
+                  rng: np.random.Generator | None = None,
+                  noise: float = 0.0) -> list[PhaseResult]:
+    """Simulate a sweep of :class:`CommPhase` objects (an AMG hierarchy, a
+    partition or machine scan) in one call.
+
+    ``recv_post_orders[i]`` / ``arrival_orders[i]`` apply to ``phases[i]``;
+    a single shared ``rng`` drives the noise stream across the whole sweep.
+    """
+    if noise > 0.0 and rng is None:
+        rng = np.random.default_rng(0)
+    out = []
+    for i, ph in enumerate(phases):
+        out.append(simulate(
+            ph,
+            recv_post_order=recv_post_orders[i] if recv_post_orders else None,
+            arrival_order=arrival_orders[i] if arrival_orders else None,
+            rng=rng, noise=noise))
+    return out

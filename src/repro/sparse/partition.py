@@ -12,13 +12,18 @@ to which process for
   CSR rows (12 bytes per nonzero: 8 value + 4 index).
 
 Returned patterns are (src, dst, size_bytes) arrays directly consumable by
-:func:`repro.core.models.phase_cost` and :func:`repro.net.simulate_phase`.
+:func:`repro.core.models.phase_cost` and :func:`repro.net.simulate_phase`;
+:meth:`CommPattern.bind` converts a pattern to a machine-bound
+:class:`repro.comm.CommPhase` for the vectorized batched APIs
+(:func:`repro.core.models.phase_cost_many`, :func:`repro.net.simulate_many`).
 """
 from __future__ import annotations
 
 import dataclasses
 
 import numpy as np
+
+from repro.comm import CommPhase
 
 from .csr import CSR
 
@@ -72,6 +77,12 @@ class CommPattern:
         if self.src.size == 0:
             return 0
         return int(np.bincount(self.dst, minlength=self.n_procs).max())
+
+    def bind(self, machine, n_procs: int | None = None) -> CommPhase:
+        """Bind this pattern to a machine: returns a :class:`CommPhase` with
+        locality, protocol, torus endpoints and active-sender counts cached."""
+        return CommPhase.build(machine, self.src, self.dst, self.size,
+                               n_procs=self.n_procs if n_procs is None else n_procs)
 
 
 def _needed_pairs(A: CSR, part: RowPartition) -> tuple[np.ndarray, np.ndarray]:

@@ -1,0 +1,42 @@
+"""Optional-hypothesis shim: property tests skip cleanly when it's absent.
+
+``hypothesis`` is a hard import in several test modules, which breaks
+*collection* of the deterministic tests in environments without it (tier-1
+CI only guarantees numpy + pytest).  Import ``given`` / ``settings`` / ``st``
+from here instead: with hypothesis installed they are the real thing; without
+it, ``@given`` marks the test as skipped and the strategy namespace accepts
+any call, so module import and all deterministic tests still run.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Accepts any attribute access / call so strategy expressions parse."""
+
+        def __getattr__(self, name):
+            return self
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+    st = _AnyStrategy()
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            # replace the test body: the parametrized arguments would
+            # otherwise look like (unresolvable) pytest fixtures
+            def skipped(*a, **k):
+                pytest.skip("hypothesis not installed")
+            skipped.__name__ = getattr(fn, "__name__", "test_skipped")
+            return skipped
+        return deco
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco

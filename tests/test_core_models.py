@@ -1,7 +1,8 @@
 """Unit + property tests for the performance-model core (the paper itself)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (blue_waters, tpu_v5e, message_time, queue_time,
                         phase_cost, model_ladder, MODEL_LEVELS,

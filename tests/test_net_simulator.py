@@ -3,7 +3,8 @@ fitted parameters must recover the ground truth the simulator was built with
 (the stand-in for the paper's Blue Waters measurements)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import blue_waters
 from repro.core.fitting import fit_alpha_beta, fit_RN, fit_gamma

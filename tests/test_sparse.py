@@ -1,7 +1,8 @@
 """Tests for the sparse substrate: CSR ops, problems, partitions, AMG."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.sparse import (CSR, eye, poisson_3d, elasticity_like_3d,
                           build_hierarchy, vcycle, RowPartition,
