@@ -249,6 +249,65 @@ def bench_simulator_throughput():
              n / (us_warm * 1e-6))]
 
 
+def bench_strategy_crossover():
+    """Node-aware strategy sweep over the AMG hierarchy (NAPSpMV question).
+
+    Rows:
+      * how many levels the simulator flips to an aggregated strategy;
+      * how often the model ladder's predicted winner matches the simulator's
+        verdict (the strategy-selection analogue of the accuracy figures);
+      * the best simulated speedup an aggregated strategy delivers over
+        standard on any level.
+    """
+    from repro.comm import best_strategy
+
+    A = elasticity_like_3d(14)
+    levels = build_hierarchy(A, theta=0.25)
+    machine = blue_waters_machine((4, 4, 2))
+
+    def run():
+        verdicts = [best_strategy(ph, seed=0)
+                    for _, ph in _amg_phases(machine, levels, "spmv")]
+        flipped = sum(v.sim_winner != "standard" for v in verdicts)
+        agree = np.mean([v.agree for v in verdicts])
+        speedup = max(v.sim["standard"] / v.sim[v.sim_winner]
+                      for v in verdicts)
+        return flipped, float(agree), float(speedup)
+
+    (flipped, agree, speedup), us = _timed(run)
+    return [("strategy_levels_flipped_to_aggregated", us, flipped),
+            ("strategy_model_sim_winner_agreement", us, agree),
+            ("strategy_best_sim_speedup_vs_standard", us, speedup)]
+
+
+def bench_strategy_rewrite_throughput():
+    """Rewrite + simulate throughput for the aggregated strategies.
+
+    The rewrites must stay array-rate (np.unique/bincount, no per-message
+    Python loops); these rows make a regression visible just like the
+    ``sim_throughput_*`` rows do for the engine.  Throughput counts original
+    messages per second through the full rewrite + sequence simulation.
+    """
+    from repro.comm import rewrite
+    from repro.net import simulate_sequence
+
+    A = elasticity_like_3d(14)
+    levels = build_hierarchy(A, theta=0.25)
+    machine = blue_waters_machine((4, 4, 2))
+    _, phase = max(_amg_phases(machine, levels, "spmv"),
+                   key=lambda t: t[1].n_msgs)
+    reps, rows = 3, []
+    for name in ("two_step", "three_step"):
+        simulate_sequence(rewrite(phase, name).phases)    # warm caches
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            simulate_sequence(rewrite(phase, name).phases)
+        us = (time.perf_counter() - t0) / reps * 1e6
+        rows.append((f"sim_throughput_{name}_msgs_per_sec", us,
+                     phase.n_msgs / (us * 1e-6)))
+    return rows
+
+
 def bench_queue_position_n2_over_3():
     """Paper Sec. 5: random receive order costs ~n^2/3 (between n and n^2/2)."""
     from repro.net.simulator import queue_traversal_steps
@@ -269,6 +328,8 @@ ALL_BENCHES = [
     bench_fig4_fig5_queue_search,
     bench_fig7_fig9_contention,
     bench_amg_spmv_spgemm,
+    bench_strategy_crossover,
     bench_queue_position_n2_over_3,
     bench_simulator_throughput,
+    bench_strategy_rewrite_throughput,
 ]

@@ -27,7 +27,9 @@ import numpy as np
 
 
 def _flatten(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree_util spelling: jax.tree.flatten_with_path only exists in
+    # newer jax releases than the pinned toolchain ships
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
     for path, leaf in flat:
         key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))

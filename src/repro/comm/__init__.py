@@ -7,15 +7,31 @@ paper's inferential gap consume it: the closed-form model ladder
 (:func:`repro.core.models.phase_cost_many`) and the mechanistic event
 simulator (:func:`repro.net.simulator.simulate`).  The shared hot-path math
 lives in :mod:`repro.comm.primitives` (numpy-only, below both consumers).
+
+:mod:`repro.comm.strategies` builds on the same engine: node-aware
+communication strategies (``standard`` / ``two_step`` / ``three_step``) are
+pure phase -> phase-sequence rewrites, so both consumers price every
+strategy with zero new cost code; :func:`best_strategy` sweeps them and
+returns the model's predicted winner plus the simulator's verdict.
+
+See ``docs/api.md`` for the public API reference and DESIGN.md §1/§7 for the
+architecture.
 """
 from .phase import CommPhase
 from .primitives import (active_senders_per_node, transport_times,
-                         per_proc_sums, group_by_receiver,
-                         queue_traversal_steps, batched_queue_traversal_steps)
+                         per_proc_sums, group_by_receiver, sum_by_pairs,
+                         segmented_arange, queue_traversal_steps,
+                         batched_queue_traversal_steps)
+from .strategies import (STRATEGIES, StrategyPlan, StrategyVerdict,
+                         standard, two_step, three_step, rewrite,
+                         injected_payload, delivered_payload, best_strategy)
 
 __all__ = [
     "CommPhase",
     "active_senders_per_node", "transport_times", "per_proc_sums",
-    "group_by_receiver", "queue_traversal_steps",
-    "batched_queue_traversal_steps",
+    "group_by_receiver", "sum_by_pairs", "segmented_arange",
+    "queue_traversal_steps", "batched_queue_traversal_steps",
+    "STRATEGIES", "StrategyPlan", "StrategyVerdict",
+    "standard", "two_step", "three_step", "rewrite",
+    "injected_payload", "delivered_payload", "best_strategy",
 ]

@@ -70,6 +70,38 @@ def per_proc_sums(idx, values, n: int) -> np.ndarray:
                        minlength=n)
 
 
+def sum_by_pairs(a, b, w) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Aggregate weights ``w`` over distinct ``(a, b)`` pairs.
+
+    Returns ``(ua, ub, sums)`` sorted by ``(a, b)``; ``sums[i]`` is the total
+    weight of pair ``(ua[i], ub[i])``.  This is the engine's one aggregation
+    idiom (``np.unique`` on a packed key + ``bincount`` on the inverse) — the
+    strategy rewrites build every gather/inter/scatter message set with it.
+    ``a`` and ``b`` must be non-negative integers.
+    """
+    a = np.asarray(a, dtype=np.int64)
+    b = np.asarray(b, dtype=np.int64)
+    w = np.asarray(w, dtype=np.float64)
+    if a.size == 0:
+        return a, b, w
+    span = np.int64(b.max()) + 1
+    uk, inv = np.unique(a * span + b, return_inverse=True)
+    sums = np.bincount(inv, weights=w)
+    return (uk // span).astype(np.int64), (uk % span).astype(np.int64), sums
+
+
+def segmented_arange(counts) -> np.ndarray:
+    """``[0..counts[0]), [0..counts[1]), ...`` concatenated (one arange per
+    segment, no Python loop) — the rank index of each expanded element within
+    its segment, used to fan a message out across ``counts[i]`` peers."""
+    counts = np.asarray(counts, dtype=np.int64)
+    total = int(counts.sum())
+    if total == 0:
+        return np.zeros(0, dtype=np.int64)
+    offsets = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    return np.arange(total) - np.repeat(offsets, counts)
+
+
 def group_by_receiver(dst, n_procs: int) -> tuple[np.ndarray, np.ndarray]:
     """Stable grouping of message indices by destination process.
 

@@ -1,0 +1,332 @@
+"""Node-aware communication strategies: pure phase -> phase-sequence rewrites.
+
+The paper's node-aware model explains *why* aggregating inter-node traffic
+helps; its successors (Lockhart et al., Collom et al.) turn the insight into
+concrete multi-step strategies.  This module makes those strategies
+first-class: a strategy is a **rewrite** that transforms one bound
+:class:`~repro.comm.CommPhase` into a *sequence* of CommPhases carrying the
+same payload along a different route.  Because each step is itself an
+ordinary CommPhase, the existing cost code prices every strategy unchanged —
+the model ladder via :func:`repro.core.models.sequence_cost` and the event
+simulator via :func:`repro.net.simulator.simulate_sequence` simply sum the
+steps.
+
+Strategies (``STRATEGIES``):
+
+``standard``
+    Identity: every message travels directly, one phase.
+``two_step``
+    Node-aware aggregation.  Each node designates a leader (its lowest
+    process).  Sequence: **gather** (every process ships its off-node payload
+    to its node leader, intra-node), **inter** (one aggregated message per
+    (send-node, recv-node) pair, leader to leader), **scatter** (the
+    receiving leader forwards each final destination its payload,
+    intra-node).  Original intra-node messages ride in a ``local`` phase.
+``three_step``
+    As ``two_step``, but the aggregated inter-node traffic of every node
+    pair is dedup-split into ``k`` equal shares injected by ``k`` distinct
+    processes on the sender node (``k`` = processes available on both ends),
+    spreading the node's injection load so the max-rate cap ``R_N`` — rather
+    than a single process's ``R_b`` — bounds throughput.  The gather/scatter
+    phases fan shares across the same ``k`` ranks.
+
+All rewrites are built from the engine's ``np.unique``/``bincount`` idiom
+(:func:`repro.comm.primitives.sum_by_pairs`,
+:func:`repro.comm.primitives.segmented_arange`) — no per-message Python
+loops.  "Off-node" means the sender's and receiver's *nodes* differ, which
+coincides with the machine's network locality classes on both shipped
+machines (Blue Waters and TPU v5e).
+
+Layering: the rewrites are numpy-only and sit below both consumers, like the
+rest of :mod:`repro.comm`.  :func:`best_strategy` is the one function that
+reaches *up* to the model ladder and the simulator; it imports them lazily
+inside the call so the package layering stays acyclic.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .phase import CommPhase
+from .primitives import segmented_arange, sum_by_pairs
+
+STRATEGIES = ("standard", "two_step", "three_step")
+
+#: Phase roles, in execution order, as they appear in ``StrategyPlan.roles``.
+ROLES = ("standard", "local", "gather", "inter", "scatter")
+
+
+@dataclasses.dataclass(frozen=True)
+class StrategyPlan:
+    """A strategy applied to one phase: the rewritten phase sequence.
+
+    ``phases[i]`` plays role ``roles[i]`` (see ``ROLES``).  A ``standard``
+    role marks an unrewritten phase (the identity strategy, or a rewrite of
+    a phase with no inter-node traffic, where every strategy degenerates to
+    the identity).
+    """
+
+    strategy: str
+    original: CommPhase
+    phases: tuple[CommPhase, ...]
+    roles: tuple[str, ...]
+
+    @property
+    def n_phases(self) -> int:
+        return len(self.phases)
+
+    @property
+    def total_msgs(self) -> int:
+        return sum(ph.n_msgs for ph in self.phases)
+
+    @property
+    def inter_node_msgs(self) -> int:
+        """Messages that cross a node boundary, summed over the sequence."""
+        return sum(int(_remote_mask(ph).sum()) for ph in self.phases)
+
+    def phase_by_role(self, role: str) -> CommPhase | None:
+        for ph, r in zip(self.phases, self.roles):
+            if r == role:
+                return ph
+        return None
+
+    def inter_node_pair_bytes(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(send_node, recv_node, bytes) actually crossing node boundaries.
+
+        Invariant under every rewrite (payload conservation): aggregation
+        changes message *counts* and *sizes*, never which node owes how many
+        payload bytes to which node.
+        """
+        sn, dn, sz = [], [], []
+        for ph in self.phases:
+            rem = _remote_mask(ph)
+            if rem.any():
+                sn.append(ph.send_node[rem])
+                dn.append(np.asarray(ph.machine.node_of(ph.dst[rem]),
+                                     dtype=np.int64))
+                sz.append(ph.size[rem])
+        if not sn:
+            z = np.zeros(0, dtype=np.int64)
+            return z, z, np.zeros(0)
+        return sum_by_pairs(np.concatenate(sn), np.concatenate(dn),
+                            np.concatenate(sz))
+
+
+def _remote_mask(phase: CommPhase) -> np.ndarray:
+    """Messages whose sender and receiver live on different nodes."""
+    dst_node = np.asarray(phase.machine.node_of(phase.dst), dtype=np.int64)
+    return phase.send_node != dst_node
+
+
+def _avail(machine, nodes: np.ndarray, n_procs: int) -> np.ndarray:
+    """Processes of each node that exist within the phase's process range.
+
+    A phase may span fewer processes than the machine hosts (a coarse AMG
+    level on a big partition); shares are only fanned across ranks that are
+    actually in ``[0, n_procs)``.  Every node that appears in the phase hosts
+    at least its leader, so the result is always >= 1.
+    """
+    ppn = machine.procs_per_node
+    return np.minimum(np.int64(ppn), n_procs - nodes * np.int64(ppn))
+
+
+def _build(machine, parts, n_procs: int) -> tuple[tuple[CommPhase, ...],
+                                                  tuple[str, ...]]:
+    phases, roles = [], []
+    for role, src, dst, size in parts:
+        if len(src):
+            phases.append(CommPhase.build(machine, src, dst, size,
+                                          n_procs=n_procs))
+            roles.append(role)
+    return tuple(phases), tuple(roles)
+
+
+def standard(phase: CommPhase) -> StrategyPlan:
+    """Identity strategy: the phase as given, in a one-phase sequence."""
+    return StrategyPlan("standard", phase, (phase,), ("standard",))
+
+
+def two_step(phase: CommPhase) -> StrategyPlan:
+    """Gather -> one inter-node message per node pair -> scatter."""
+    return _aggregated(phase, "two_step", split=False)
+
+
+def three_step(phase: CommPhase) -> StrategyPlan:
+    """Two-step with each node pair's traffic split across k injectors."""
+    return _aggregated(phase, "three_step", split=True)
+
+
+def _aggregated(phase: CommPhase, name: str, split: bool) -> StrategyPlan:
+    m, P = phase.machine, phase.n_procs
+    ppn = np.int64(m.procs_per_node)
+    remote = _remote_mask(phase)
+    if not remote.any():            # nothing to aggregate: identity
+        return StrategyPlan(name, phase, (phase,), ("standard",))
+
+    parts = [("local", phase.src[~remote], phase.dst[~remote],
+              phase.size[~remote])]
+    rs, rd, rsz = phase.src[remote], phase.dst[remote], phase.size[remote]
+    rsn = phase.send_node[remote]
+    rdn = np.asarray(m.node_of(rd), dtype=np.int64)
+
+    # shares per message: 1 (leader only) or k = procs available on both ends
+    if split:
+        k = np.minimum(_avail(m, rsn, P), _avail(m, rdn, P))
+    else:
+        k = np.ones(rs.size, dtype=np.int64)
+    rep = np.repeat(np.arange(rs.size), k)      # message id of each share
+    rank = segmented_arange(k)                  # injector rank of each share
+    share = rsz[rep] / k[rep]
+
+    # gather: origin -> the k injector ranks on its own node (equal shares;
+    # the share an injector originates itself needs no message)
+    g_src, g_dst = rs[rep], rsn[rep] * ppn + rank
+    keep = g_src != g_dst
+    parts.append(("gather", *sum_by_pairs(g_src[keep], g_dst[keep],
+                                          share[keep])))
+
+    # inter: aggregate payload per (send node, recv node), then one message
+    # per injector rank r: (S, r) -> (D, r)
+    Sn, Dn, B = sum_by_pairs(rsn, rdn, rsz)
+    if split:
+        kp = np.minimum(_avail(m, Sn, P), _avail(m, Dn, P))
+    else:
+        kp = np.ones(Sn.size, dtype=np.int64)
+    prep = np.repeat(np.arange(Sn.size), kp)
+    prank = segmented_arange(kp)
+    parts.append(("inter", Sn[prep] * ppn + prank, Dn[prep] * ppn + prank,
+                  B[prep] / kp[prep]))
+
+    # scatter: the k receiving ranks on the destination node forward each
+    # final destination its shares (a rank's own share needs no message)
+    s_src, s_dst = rdn[rep] * ppn + rank, rd[rep]
+    keep = s_src != s_dst
+    parts.append(("scatter", *sum_by_pairs(s_src[keep], s_dst[keep],
+                                           share[keep])))
+
+    phases, roles = _build(m, parts, P)
+    return StrategyPlan(name, phase, phases, roles)
+
+
+_REWRITES = {"standard": standard, "two_step": two_step,
+             "three_step": three_step}
+
+
+def rewrite(phase: CommPhase, strategy: str) -> StrategyPlan:
+    """Apply one named strategy rewrite to a bound phase."""
+    try:
+        fn = _REWRITES[strategy]
+    except KeyError:
+        raise ValueError(f"unknown strategy {strategy!r}; "
+                         f"expected one of {STRATEGIES}") from None
+    return fn(phase)
+
+
+# -- payload-conservation accessors -----------------------------------------
+#
+# Both are flow identities over the rewritten message arrays alone (no use of
+# the original payload), so tests can compare them against the original phase
+# to certify a rewrite delivers exactly what was sent.
+
+def injected_payload(plan: StrategyPlan) -> np.ndarray:
+    """Per-process payload bytes *originated*, reconstructed from the plan.
+
+    An injector's inter-phase sends equal its gather-phase receipts plus the
+    shares it originated itself, so ``local + gather + inter - gather_recv``
+    telescopes back to the original per-source payload.
+    """
+    P = plan.original.n_procs
+    out = np.zeros(P)
+    for ph, role in zip(plan.phases, plan.roles):
+        if role in ("standard", "local", "gather", "inter"):
+            out += np.bincount(ph.src, weights=ph.size, minlength=P)
+        if role == "gather":
+            out -= np.bincount(ph.dst, weights=ph.size, minlength=P)
+    return out
+
+
+def delivered_payload(plan: StrategyPlan) -> np.ndarray:
+    """Per-process payload bytes *finally delivered* (mirror identity:
+    ``local + scatter + inter - scatter_sent``)."""
+    P = plan.original.n_procs
+    out = np.zeros(P)
+    for ph, role in zip(plan.phases, plan.roles):
+        if role in ("standard", "local", "scatter", "inter"):
+            out += np.bincount(ph.dst, weights=ph.size, minlength=P)
+        if role == "scatter":
+            out -= np.bincount(ph.src, weights=ph.size, minlength=P)
+    return out
+
+
+# -- the strategy sweep ------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StrategyVerdict:
+    """Every strategy priced by the model ladder and judged by the simulator.
+
+    ``model[s]`` is the model-ladder total (at the requested level) summed
+    over strategy ``s``'s phase sequence; ``sim[s]`` is the simulator's.  The
+    *predicted* winner comes from the model alone — the simulator's verdict
+    is the ground truth the prediction is scored against, across the same
+    inferential gap the paper has between model and machine.
+    """
+
+    plans: dict[str, StrategyPlan]
+    model: dict[str, float]
+    sim: dict[str, float]
+    model_winner: str
+    sim_winner: str
+
+    @property
+    def agree(self) -> bool:
+        return self.model_winner == self.sim_winner
+
+
+def best_strategy(pattern, machine=None, *, strategies=STRATEGIES,
+                  level: str = "contention", arrival: str = "random",
+                  seed: int = 0, params=None) -> StrategyVerdict:
+    """Sweep strategies over one phase; return the model's pick and the
+    simulator's verdict.
+
+    ``pattern`` is a :class:`repro.sparse.CommPattern` (bound to ``machine``)
+    or an already-bound :class:`CommPhase`.  ``arrival='random'`` drives the
+    simulator with the paper's Sec.-5 irregular regime (random envelope
+    arrival, seeded); ``'posted'`` uses best-case in-order arrival.  The
+    model prices phases at ladder ``level``; ``params`` substitutes a fitted
+    parameter table for the machine's ground truth on the model side only.
+    """
+    if arrival not in ("random", "posted"):
+        raise ValueError(f"unknown arrival regime {arrival!r}; "
+                         "expected 'random' or 'posted'")
+    # lazy: repro.core.models / repro.net.simulator both import repro.comm
+    from repro.core.models import sequence_cost
+    from repro.net.simulator import simulate_sequence
+
+    if hasattr(pattern, "bind"):
+        if machine is None:
+            raise ValueError("a CommPattern needs a machine to bind to")
+        phase = pattern.bind(machine)
+    elif machine is not None and machine is not pattern.machine:
+        # a bound phase caches machine-derived arrays: sweeping machines
+        # means rebinding the message set, not reusing the stale cache
+        phase = CommPhase.build(machine, pattern.src, pattern.dst,
+                                pattern.size, n_procs=pattern.n_procs)
+    else:
+        phase = pattern
+
+    plans, model, sim = {}, {}, {}
+    for name in strategies:
+        plan = rewrite(phase, name)
+        rng = np.random.default_rng(seed)
+        arrivals = ([ph.random_arrival_order(rng) for ph in plan.phases]
+                    if arrival == "random" else None)
+        plans[name] = plan
+        model[name] = sequence_cost(plan.phases, level=level,
+                                    params=params).total
+        sim[name] = simulate_sequence(plan.phases,
+                                      arrival_orders=arrivals).time
+    return StrategyVerdict(
+        plans=plans, model=model, sim=sim,
+        model_winner=min(model, key=model.get),
+        sim_winner=min(sim, key=sim.get))

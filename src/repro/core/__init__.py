@@ -15,7 +15,8 @@ from .params import (CommParams, blue_waters, tpu_v5e, SHORT, EAGER, REND,
                      PROTOCOL_NAMES)
 from .models import (CostBreakdown, message_time, queue_time, contention_time,
                      phase_cost, model_ladder, MODEL_LEVELS,
-                     phase_cost_phase, phase_cost_many, model_ladder_many)
+                     phase_cost_phase, phase_cost_many, model_ladder_many,
+                     sequence_cost)
 from .topology import TorusTopology, average_hops, contention_ell, cube_side
 from .fitting import (fit_alpha_beta, fit_node_aware_table, fit_RN, fit_gamma,
                       fit_delta)
@@ -30,6 +31,7 @@ __all__ = [
     "CostBreakdown", "message_time", "queue_time", "contention_time",
     "phase_cost", "model_ladder", "MODEL_LEVELS",
     "phase_cost_phase", "phase_cost_many", "model_ladder_many",
+    "sequence_cost",
     "TorusTopology", "average_hops", "contention_ell", "cube_side",
     "fit_alpha_beta", "fit_node_aware_table", "fit_RN", "fit_gamma", "fit_delta",
     "CollectiveOp", "parse_collectives", "collective_summary", "shape_bytes",

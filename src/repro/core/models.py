@@ -207,3 +207,18 @@ def model_ladder_many(phases, params: CommParams | None = None
     """Evaluate the full model ladder on a sweep of phases."""
     return [{lvl: phase_cost_phase(ph, level=lvl, params=params)
              for lvl in MODEL_LEVELS} for ph in phases]
+
+
+def sequence_cost(phases, level: str = "contention",
+                  params: CommParams | None = None) -> CostBreakdown:
+    """Price a multi-phase *sequence* (e.g. a strategy rewrite's
+    gather -> inter -> scatter).  Phases execute back-to-back — each must
+    complete before the next posts — so per-phase costs add.  This is what
+    lets the strategy layer reuse the cost code unchanged: a rewrite only
+    produces more CommPhases, never new cost formulas."""
+    parts = phase_cost_many(phases, level=level, params=params)
+    return CostBreakdown(
+        transport=sum(p.transport for p in parts),
+        queue=sum(p.queue for p in parts),
+        contention=sum(p.contention for p in parts),
+        total=sum(p.total for p in parts))

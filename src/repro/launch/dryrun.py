@@ -147,9 +147,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         return {**base, "status": "skipped", "reason": why}
 
     if mesh_shape is not None:
-        import jax as _jax
-        mesh = _jax.make_mesh(mesh_shape, ("data", "model"),
-                              axis_types=(_jax.sharding.AxisType.Auto,) * 2)
+        from .mesh import make_mesh
+        mesh = make_mesh(mesh_shape, ("data", "model"))
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)
     plan = make_mesh_plan(mesh)

@@ -8,7 +8,8 @@ queues, and routes bytes over a torus with per-link accounting.  The model in
 inferential gap the paper has between closed-form model and machine.
 """
 from .machine import MachineSpec, blue_waters_machine, tpu_v5e_machine
-from .simulator import PhaseResult, simulate, simulate_phase, simulate_many
+from .simulator import (PhaseResult, SequenceResult, simulate, simulate_phase,
+                        simulate_many, simulate_sequence)
 from .pingpong import (
     pingpong_time, pingpong_sweep, ppn_sweep, high_volume_pingpong,
     contention_line_test,
@@ -16,7 +17,8 @@ from .pingpong import (
 
 __all__ = [
     "MachineSpec", "blue_waters_machine", "tpu_v5e_machine",
-    "PhaseResult", "simulate", "simulate_phase", "simulate_many",
+    "PhaseResult", "SequenceResult", "simulate", "simulate_phase",
+    "simulate_many", "simulate_sequence",
     "pingpong_time", "pingpong_sweep", "ppn_sweep", "high_volume_pingpong",
     "contention_line_test",
 ]

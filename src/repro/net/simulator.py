@@ -34,8 +34,8 @@ from repro.comm.primitives import (per_proc_sums, queue_traversal_steps,
 
 from .machine import MachineSpec
 
-__all__ = ["PhaseResult", "simulate", "simulate_phase", "simulate_many",
-           "queue_traversal_steps"]
+__all__ = ["PhaseResult", "SequenceResult", "simulate", "simulate_phase",
+           "simulate_many", "simulate_sequence", "queue_traversal_steps"]
 
 
 @dataclasses.dataclass
@@ -90,6 +90,36 @@ def simulate(phase: CommPhase,
         total *= float(np.exp(rng.normal(0.0, noise)))
     return PhaseResult(total, transport, queue, contention,
                        per_proc, qsteps, max_link, net_bytes)
+
+
+@dataclasses.dataclass
+class SequenceResult:
+    """Summed result of a multi-phase sequence (a strategy rewrite): the
+    phases execute back-to-back, so times add; per-phase results are kept
+    for breakdown tables."""
+    time: float
+    transport: float
+    queue: float
+    contention: float
+    phases: list[PhaseResult]
+
+
+def simulate_sequence(phases,
+                      recv_post_orders=None,
+                      arrival_orders=None,
+                      rng: np.random.Generator | None = None,
+                      noise: float = 0.0) -> SequenceResult:
+    """Simulate a phase *sequence* end-to-end (e.g. the gather -> inter ->
+    scatter steps of a strategy rewrite) and sum the step times."""
+    results = simulate_many(phases, recv_post_orders=recv_post_orders,
+                            arrival_orders=arrival_orders, rng=rng,
+                            noise=noise)
+    return SequenceResult(
+        time=sum(r.time for r in results),
+        transport=sum(r.transport for r in results),
+        queue=sum(r.queue for r in results),
+        contention=sum(r.contention for r in results),
+        phases=results)
 
 
 def simulate_phase(machine: MachineSpec, src, dst, size,

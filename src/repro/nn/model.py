@@ -111,7 +111,9 @@ def param_dtype(path: tuple, cfg: ArchConfig) -> jnp.dtype:
 
 
 def _tree_with_paths(shapes: PyTree):
-    flat, treedef = jax.tree.flatten_with_path(
+    # jax.tree_util spelling: jax.tree.flatten_with_path only exists in
+    # newer jax releases than the pinned toolchain ships
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
         shapes, is_leaf=lambda x: isinstance(x, tuple) and all(
             isinstance(i, int) for i in x))
     return flat, treedef
@@ -411,14 +413,14 @@ def cache_dtype(name: str, cfg: ArchConfig | None = None) -> jnp.dtype:
 
 def abstract_cache(cfg: ArchConfig, batch: int, max_seq: int) -> PyTree:
     shapes = cache_shapes(cfg, batch, max_seq)
-    return jax.tree.map_with_path(
+    return jax.tree_util.tree_map_with_path(
         lambda p, sh: jax.ShapeDtypeStruct(sh, cache_dtype(_names(p)[-1], cfg)),
         shapes, is_leaf=lambda x: isinstance(x, tuple))
 
 
 def init_cache(cfg: ArchConfig, batch: int, max_seq: int) -> PyTree:
     shapes = cache_shapes(cfg, batch, max_seq)
-    return jax.tree.map_with_path(
+    return jax.tree_util.tree_map_with_path(
         lambda p, sh: jnp.zeros(sh, cache_dtype(_names(p)[-1], cfg)),
         shapes, is_leaf=lambda x: isinstance(x, tuple))
 

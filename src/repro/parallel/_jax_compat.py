@@ -1,0 +1,29 @@
+"""jax API compat for the pinned toolchain.
+
+``jax.shard_map`` (top-level, with the ``check_vma`` kwarg) only exists in
+newer jax releases; the pinned toolchain ships the experimental spelling
+with ``check_rep``.  Everything in :mod:`repro.parallel` goes through this
+wrapper so call sites read like current jax.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def pcast(x, axis_names, to: str = "varying"):
+    """``jax.lax.pcast`` where it exists; identity on pre-vma jax, whose
+    shard_map has no varying-axis typing (and hence nothing to cast)."""
+    fn = getattr(jax.lax, "pcast", None)
+    if fn is not None:
+        return fn(x, axis_names, to=to)
+    return x
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    new = getattr(jax, "shard_map", None)
+    if new is not None:
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return new(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as old
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

@@ -156,7 +156,7 @@ def param_pspecs(cfg: ArchConfig, plan: MeshPlan, fsdp: bool = False):
             spec = _add_data_sharding(spec, sh, plan)
         return spec
 
-    return jax.tree.map_with_path(
+    return jax.tree_util.tree_map_with_path(
         rule, shapes, is_leaf=lambda x: isinstance(x, tuple) and all(
             isinstance(i, int) for i in x))
 
@@ -164,7 +164,7 @@ def param_pspecs(cfg: ArchConfig, plan: MeshPlan, fsdp: bool = False):
 def zero1_pspecs(param_specs, cfg: ArchConfig, plan: MeshPlan):
     """Optimizer-moment specs: parameter specs + data-axis sharding (ZeRO-1)."""
     shapes = param_shapes(cfg)
-    return jax.tree.map_with_path(
+    return jax.tree_util.tree_map_with_path(
         lambda p, sh: _add_data_sharding(_lookup(param_specs, p), sh, plan),
         shapes, is_leaf=lambda x: isinstance(x, tuple) and all(
             isinstance(i, int) for i in x))
@@ -227,7 +227,7 @@ def cache_pspecs(plan: MeshPlan, cache_tree):
             return P(None, dp, None, None)
         return P(*([None] * len(sh)))
 
-    return jax.tree.map_with_path(rule, cache_tree)
+    return jax.tree_util.tree_map_with_path(rule, cache_tree)
 
 
 def shardings(tree_of_specs, mesh: Mesh):

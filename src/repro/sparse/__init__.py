@@ -3,12 +3,13 @@ communication-pattern extraction, and classical AMG — the application layer
 the paper validates its models on (SpMV / SpGEMM across hierarchy levels)."""
 from .csr import CSR, eye, diag
 from .problems import poisson_3d, elasticity_like_3d
-from .partition import RowPartition, spmv_comm_pattern, spgemm_comm_pattern
+from .partition import (RowPartition, CommPattern, spmv_comm_pattern,
+                        spgemm_comm_pattern)
 from .amg import build_hierarchy, vcycle, AMGLevel
 
 __all__ = [
     "CSR", "eye", "diag",
     "poisson_3d", "elasticity_like_3d",
-    "RowPartition", "spmv_comm_pattern", "spgemm_comm_pattern",
+    "RowPartition", "CommPattern", "spmv_comm_pattern", "spgemm_comm_pattern",
     "build_hierarchy", "vcycle", "AMGLevel",
 ]

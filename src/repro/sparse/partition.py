@@ -84,6 +84,21 @@ class CommPattern:
         return CommPhase.build(machine, self.src, self.dst, self.size,
                                n_procs=self.n_procs if n_procs is None else n_procs)
 
+    def rewrite(self, machine, strategy: str):
+        """Bind to ``machine`` and apply a node-aware strategy rewrite.
+
+        Returns a :class:`repro.comm.StrategyPlan` whose phase sequence the
+        batched entry points price directly (``sequence_cost`` /
+        ``simulate_sequence``)."""
+        from repro.comm.strategies import rewrite
+        return rewrite(self.bind(machine), strategy)
+
+    def best_strategy(self, machine, **kw):
+        """Sweep every strategy on this pattern: the model ladder's predicted
+        winner plus the simulator's verdict (:func:`repro.comm.best_strategy`)."""
+        from repro.comm.strategies import best_strategy
+        return best_strategy(self, machine, **kw)
+
 
 def _needed_pairs(A: CSR, part: RowPartition) -> tuple[np.ndarray, np.ndarray]:
     """Distinct (requesting proc, off-proc column) pairs over A's nonzeros."""

@@ -1,0 +1,53 @@
+"""Documentation checks: every internal link in the markdown docs resolves.
+
+Covers relative file links (``[x](DESIGN.md)``, ``[x](docs/api.md)``) and
+GitHub-style heading anchors (``[x](DESIGN.md#7-...)``) in README.md,
+DESIGN.md and docs/*.md.  External (http/https) links are not fetched.
+"""
+import re
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+DOCS = sorted([ROOT / "README.md", ROOT / "DESIGN.md",
+               *(ROOT / "docs").glob("*.md")])
+
+_LINK = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def _github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, strip punctuation, spaces->dashes."""
+    h = re.sub(r"`([^`]*)`", r"\1", heading)      # unwrap code spans
+    h = h.strip().lower()
+    h = re.sub(r"[^\w\- ]", "", h)                # drop punctuation (incl. §)
+    return h.replace(" ", "-")
+
+
+def _anchors(md: Path) -> set:
+    return {_github_slug(m.group(1)) for m in _HEADING.finditer(md.read_text())}
+
+
+def _links(md: Path):
+    for m in _LINK.finditer(md.read_text()):
+        target = m.group(1)
+        if not target.startswith(("http://", "https://", "mailto:")):
+            yield target
+
+
+@pytest.mark.parametrize("doc", DOCS, ids=lambda p: str(p.relative_to(ROOT)))
+def test_internal_links_resolve(doc):
+    assert doc.exists()
+    for target in _links(doc):
+        path_part, _, anchor = target.partition("#")
+        dest = doc if not path_part else (doc.parent / path_part).resolve()
+        assert dest.exists(), f"{doc.name}: broken link -> {target}"
+        if anchor:
+            assert anchor in _anchors(dest), \
+                f"{doc.name}: dangling anchor -> {target}"
+
+
+def test_docs_exist():
+    for p in (ROOT / "README.md", ROOT / "DESIGN.md", ROOT / "docs" / "api.md"):
+        assert p.exists(), p

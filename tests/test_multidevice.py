@@ -15,12 +15,13 @@ import json
 import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import make_mesh
 
 results = {}
 
 # ---------------------------------------------------------- compression ----
 from repro.parallel.compression import dp_grads_compressed
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
 rng = np.random.default_rng(0)
 params = {"w": jnp.asarray(rng.standard_normal((16, 4)), jnp.float32)}
 batch = {"x": jnp.asarray(rng.standard_normal((32, 16)), jnp.float32),
@@ -50,8 +51,7 @@ results["compress_ef_rel_err"] = rel_ef
 
 # -------------------------------------------------------------- pipeline ---
 from repro.parallel.pipeline import gpipe, stack_stages
-mesh2 = jax.make_mesh((4, 2), ("pod", "data"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh2 = make_mesh((4, 2), ("pod", "data"))
 L, d = 8, 16
 layers = {"w": jnp.asarray(rng.standard_normal((L, d, d)) / np.sqrt(d),
                            jnp.float32)}
@@ -82,8 +82,7 @@ from repro.configs import get_smoke_config
 import dataclasses
 cfg = get_smoke_config("qwen3-moe-30b-a3b")
 cfg = dataclasses.replace(cfg, capacity_factor=8.0)   # no drops
-mesh3 = jax.make_mesh((8,), ("model",),
-                      axis_types=(jax.sharding.AxisType.Auto,))
+mesh3 = make_mesh((8,), ("model",))
 d, E, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
 p = {"router": jnp.asarray(rng.standard_normal((d, E)) * 0.02, jnp.float32),
      "w1": jnp.asarray(rng.standard_normal((E, d, f)) / np.sqrt(d), jnp.float32),

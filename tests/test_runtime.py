@@ -93,8 +93,8 @@ def test_elastic_restore_different_topology(tmp_path):
     from jax.sharding import NamedSharding, PartitionSpec as P
     t = {"w": jnp.arange(64.0).reshape(8, 8)}
     save_checkpoint(str(tmp_path), 1, t)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("data",))
     sh = {"w": NamedSharding(mesh, P("data", None))}
     t2 = load_checkpoint(str(tmp_path), 1, t, shardings=sh)
     np.testing.assert_array_equal(np.asarray(t2["w"]), np.asarray(t["w"]))
