@@ -106,5 +106,102 @@ def bench_torus_routing():
             ("kernel_torus_route_links_per_sec", us, hops / (us * 1e-6))]
 
 
+def _best_of(fn, reps: int = 3, trials: int = 4):
+    """Best-of-N mean wall time (us) — robust against CI-runner throttling."""
+    out = fn()                                  # warm caches / first-call work
+    best = float("inf")
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn()
+        best = min(best, (time.perf_counter() - t0) / reps)
+    return best * 1e6, out
+
+
+def bench_phase_stack():
+    """PhaseStack sweep throughput vs the per-phase loop (DESIGN.md §8).
+
+    Workload: the AMG hierarchy x partition scan (SpMV halo exchanges of a
+    Poisson hierarchy partitioned at 13 process counts — the paper's sweep
+    axis), all phases prebound to one machine.  Each row times the *sweep
+    evaluation*: the loop path prices/simulates phase by phase
+    (``phase_cost_phase`` / ``simulate``, the pre-stack code path, still the
+    mixed-machine fallback), the stacked path goes through the PhaseStack
+    fast path of the same batched entry points.  Construction (pattern
+    extraction, binding, strategy rewrites, arrival draws) is shared
+    preprocessing, excluded from both sides.  ``derived`` is the speedup;
+    results are asserted bit-identical before timing.
+    """
+    import numpy as onp
+    from repro.comm import PhaseStack, STRATEGIES, rewrite
+    from repro.core import (MODEL_LEVELS, model_ladder_many, phase_cost_many,
+                            phase_cost_phase)
+    from repro.net import blue_waters_machine, simulate, simulate_many
+    from repro.sparse import RowPartition, build_hierarchy, poisson_3d, \
+        spmv_comm_pattern
+
+    machine = blue_waters_machine((4, 4, 2))
+    levels = build_hierarchy(poisson_3d(12), theta=0.25)
+
+    def scan_phases(procs):
+        out = []
+        for nproc in procs:
+            for lvl in levels:
+                part = RowPartition.balanced(
+                    lvl.A.n_rows, min(nproc, max(lvl.A.n_rows // 2, 2)))
+                cp = spmv_comm_pattern(lvl.A, part)
+                if cp.n_msgs:
+                    out.append(cp.bind(machine))
+        return out
+
+    rows = []
+    phases = scan_phases((8, 12, 16, 24, 32, 48, 64, 96, 128, 192, 256,
+                          384, 512))
+    stack = PhaseStack.build(phases)
+
+    # -- model ladder x hierarchy x partitions -------------------------------
+    us_loop, ref = _best_of(
+        lambda: [{lvl: phase_cost_phase(ph, level=lvl)
+                  for lvl in MODEL_LEVELS} for ph in phases], reps=2)
+    us_stack, got = _best_of(lambda: model_ladder_many(stack), reps=5)
+    assert got == ref, "stacked ladder drifted from the per-phase loop"
+    rows.append(("stack_model_ladder", us_stack, us_loop / us_stack))
+
+    # -- simulator sweep, random envelope arrival ----------------------------
+    arrivals = [ph.random_arrival_flat(onp.random.default_rng(0))
+                for ph in phases]
+    us_loop, ref = _best_of(
+        lambda: [simulate(ph, arrival_order=ao)
+                 for ph, ao in zip(phases, arrivals)], reps=2)
+    us_stack, got = _best_of(
+        lambda: simulate_many(stack, arrival_orders=arrivals), reps=2)
+    assert all(g.time == r.time and g.queue == r.queue
+               and g.contention == r.contention
+               for g, r in zip(got, ref)), "stacked simulate drifted"
+    rows.append(("stack_simulate", us_stack, us_loop / us_stack))
+
+    # -- strategy candidate set: every (pattern, strategy) phase sequence ----
+    cand_phases, cand_arrivals = [], []
+    for ph in scan_phases((8, 12, 16, 24, 32, 48, 64, 96, 128)):
+        for name in STRATEGIES:
+            plan = rewrite(ph, name)
+            rng = onp.random.default_rng(0)
+            cand_phases.extend(plan.phases)
+            cand_arrivals.extend(p.random_arrival_flat(rng)
+                                 for p in plan.phases)
+    cstack = PhaseStack.build(cand_phases)
+    us_loop, ref = _best_of(
+        lambda: ([phase_cost_phase(p).total for p in cand_phases],
+                 [simulate(p, arrival_order=a).time
+                  for p, a in zip(cand_phases, cand_arrivals)]), reps=2)
+    us_stack, got = _best_of(
+        lambda: ([c.total for c in phase_cost_many(cstack)],
+                 [r.time for r in simulate_many(
+                     cstack, arrival_orders=cand_arrivals)]), reps=2)
+    assert got == ref, "stacked strategy sweep drifted"
+    rows.append(("stack_best_strategy", us_stack, us_loop / us_stack))
+    return rows
+
+
 ALL_BENCHES = [bench_flash_attention, bench_ssd, bench_spmv,
-               bench_torus_routing]
+               bench_torus_routing, bench_phase_stack]

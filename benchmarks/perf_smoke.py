@@ -1,0 +1,55 @@
+"""CI perf smoke: the PhaseStack sweep path must never lose to the loop.
+
+Checks the ``stack_*`` rows of :mod:`benchmarks.bench_kernels` (stacked
+sweep vs per-phase loop on the AMG hierarchy x partition scan, bit-identity
+asserted inside the bench) and fails if any stacked path is slower than its
+per-phase loop path.  The threshold is 1.0x — deliberately far below the
+typical speedups — so CI-runner throttling noise cannot flake the gate while
+a real regression (the stack falling back to the loop, a cache being lost,
+a reduction going quadratic) still trips it.
+
+Usage::
+
+    python -m benchmarks.perf_smoke [bench.csv]
+
+With a CSV argument (the ``benchmarks.run`` output, as in CI) the gate is
+applied to its ``stack_*`` rows without re-running the workload; without one
+the benchmark is executed directly (local development).
+"""
+from __future__ import annotations
+
+import sys
+
+STACK_ROWS = ("stack_model_ladder", "stack_simulate", "stack_best_strategy")
+
+
+def _rows_from_csv(path: str):
+    rows = []
+    with open(path) as f:
+        for line in f:
+            parts = line.strip().split(",")
+            if parts and parts[0] in STACK_ROWS:
+                rows.append((parts[0], float(parts[1]), float(parts[2])))
+    if {name for name, _, _ in rows} != set(STACK_ROWS):
+        raise SystemExit(f"{path} is missing stack_* rows — did "
+                         "benchmarks.run fail before bench_phase_stack?")
+    return rows
+
+
+def main() -> None:
+    if len(sys.argv) > 1:
+        rows = _rows_from_csv(sys.argv[1])
+    else:
+        from .bench_kernels import bench_phase_stack
+        rows = bench_phase_stack()
+    failed = False
+    for name, us, speedup in rows:
+        status = "ok" if speedup >= 1.0 else "SLOWER THAN LOOP"
+        print(f"{name}: {us:.0f} us/sweep, {speedup:.2f}x vs loop  [{status}]")
+        failed |= speedup < 1.0
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

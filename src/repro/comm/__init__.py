@@ -14,24 +14,37 @@ pure phase -> phase-sequence rewrites, so both consumers price every
 strategy with zero new cost code; :func:`best_strategy` sweeps them and
 returns the model's predicted winner plus the simulator's verdict.
 
-See ``docs/api.md`` for the public API reference and DESIGN.md §1/§7 for the
-architecture.
+:mod:`repro.comm.stack` lifts the engine from phases to *sweeps*: a
+:class:`PhaseStack` concatenates a whole sweep of same-machine phases into
+one ragged arena and evaluates every quantity in one segmented pass —
+bit-identical to the per-phase loop, with an optional JAX/Pallas backend
+for the reductions (:mod:`repro.kernels.comm_stack`).  The batched entry
+points (``phase_cost_many`` / ``model_ladder_many`` / ``simulate_many`` /
+``best_strategy``) ride it automatically.
+
+See ``docs/api.md`` for the public API reference and DESIGN.md §1/§7/§8 for
+the architecture.
 """
 from .phase import CommPhase
 from .primitives import (active_senders_per_node, transport_times,
                          per_proc_sums, group_by_receiver, sum_by_pairs,
-                         segmented_arange, queue_traversal_steps,
+                         segmented_arange, grouped_queue_steps,
+                         queue_traversal_steps,
                          batched_queue_traversal_steps)
+from .stack import PhaseStack, StackSimArrays
 from .strategies import (STRATEGIES, StrategyPlan, StrategyVerdict,
                          standard, two_step, three_step, rewrite,
-                         injected_payload, delivered_payload, best_strategy)
+                         injected_payload, delivered_payload, best_strategy,
+                         best_strategy_many)
 
 __all__ = [
-    "CommPhase",
+    "CommPhase", "PhaseStack", "StackSimArrays",
     "active_senders_per_node", "transport_times", "per_proc_sums",
     "group_by_receiver", "sum_by_pairs", "segmented_arange",
+    "grouped_queue_steps",
     "queue_traversal_steps", "batched_queue_traversal_steps",
     "STRATEGIES", "StrategyPlan", "StrategyVerdict",
     "standard", "two_step", "three_step", "rewrite",
     "injected_payload", "delivered_payload", "best_strategy",
+    "best_strategy_many",
 ]

@@ -22,7 +22,7 @@ from typing import Any
 
 import numpy as np
 
-from .primitives import batched_queue_traversal_steps, group_by_receiver
+from .primitives import group_by_receiver, grouped_queue_steps
 from .primitives import active_senders_per_node
 
 
@@ -103,57 +103,43 @@ class CommPhase:
         posted and envelopes arrive.  Default is array order for both (best
         case: every arrival matches the queue head, n steps total); receivers
         with a custom order pay the exact Fenwick walk, batched across all of
-        them in one sweep.
+        them in one sweep (:func:`repro.comm.primitives.grouped_queue_steps`,
+        which the stacked sweep path shares with ``(phase, receiver)`` slots).
         """
         if self.n_msgs == 0:
             return np.zeros(self.n_procs, dtype=np.int64)
-        order, bounds = self.receiver_groups()
-        counts = np.diff(bounds)
-        qsteps = counts.astype(np.int64).copy()   # default order: 1 step/arrival
-        custom = sorted({int(p) for p in (recv_post_order or ())}
-                        | {int(p) for p in (arrival_order or ())})
-        custom = [p for p in custom if 0 <= p < self.n_procs and counts[p] > 0]
-        if not custom:
-            return qsteps
-        # local index of every message within its receiver group
-        local = np.empty(self.n_msgs, dtype=np.int64)
-        local[order] = np.arange(self.n_msgs) - np.repeat(bounds[:-1], counts)
-        posted_parts, arrive_parts, cbounds = [], [], [0]
-        for p in custom:
-            n = int(counts[p])
-            posted_parts.append(self._local_perm(recv_post_order, p, local, n))
-            arrive_parts.append(self._local_perm(arrival_order, p, local, n))
-            cbounds.append(cbounds[-1] + n)
-        steps = batched_queue_traversal_steps(np.concatenate(posted_parts),
-                                              np.concatenate(arrive_parts),
-                                              np.asarray(cbounds))
-        qsteps[custom] = np.add.reduceat(steps, np.asarray(cbounds[:-1]))
-        return qsteps
+        return grouped_queue_steps(self.dst, self.n_procs,
+                                   recv_post_order=recv_post_order,
+                                   arrival_order=arrival_order,
+                                   groups=self.receiver_groups())
 
-    def _local_perm(self, orders, p: int, local: np.ndarray, n: int) -> np.ndarray:
-        """Map receiver ``p``'s order entry to region-local indices, loudly
-        rejecting message indices not destined to ``p``."""
-        ids = orders.get(p) if orders else None
-        if ids is None:
-            return np.arange(n)
-        ids = np.asarray(ids, dtype=np.int64)
-        if (ids.size != n or np.unique(ids).size != n
-                or np.any(self.dst[ids] != p)):
-            raise ValueError(
-                f"order for receiver {p} must be a permutation of the "
-                f"{n} message indices destined to it")
-        return local[ids]
+    def random_arrival_flat(self, rng: np.random.Generator
+                            ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Random envelope-arrival permutations in the flat ``(slots, lens,
+        ids)`` form of :func:`repro.comm.primitives.flat_orders` (the paper's
+        Sec.-5 irregular regime: matches land at ~n^2/3 queue positions).
+
+        One shuffle for the whole phase: iid uniform keys per message, one
+        lexsort by (receiver, key) — a uniform random permutation within
+        every receiver segment, with no per-receiver generator calls or
+        array slicing.  :meth:`random_arrival_order` packages the same
+        permutations (same rng stream) as a per-receiver dict.
+        """
+        z = np.zeros(0, dtype=np.int64)
+        if self.n_msgs == 0:
+            return z, z.copy(), z.copy()
+        keys = rng.random(self.n_msgs)
+        perm = np.lexsort((keys, self.dst))       # grouped by receiver,
+        dst_sorted = self.dst[perm]               # random within each group
+        starts = np.nonzero(np.r_[True, dst_sorted[1:] != dst_sorted[:-1]])[0]
+        lens = np.diff(np.r_[starts, dst_sorted.size])
+        return dst_sorted[starts], lens, perm
 
     def random_arrival_order(self, rng: np.random.Generator) -> dict[int, np.ndarray]:
-        """Random envelope-arrival permutation per receiver (the paper's
-        Sec.-5 irregular regime: matches land at ~n^2/3 queue positions)."""
-        order, bounds = self.receiver_groups()
-        out: dict[int, np.ndarray] = {}
-        for p in range(self.n_procs):
-            ids = order[bounds[p]:bounds[p + 1]]
-            if ids.size:
-                out[p] = rng.permutation(ids)
-        return out
+        """Dict view of :meth:`random_arrival_flat` (receiver -> permutation)."""
+        slots, lens, perm = self.random_arrival_flat(rng)
+        return {int(s): ids
+                for s, ids in zip(slots, np.split(perm, np.cumsum(lens)[:-1]))}
 
     # -- link contention ----------------------------------------------------
     def link_contention(self) -> tuple[float, float]:

@@ -114,6 +114,136 @@ def group_by_receiver(dst, n_procs: int) -> tuple[np.ndarray, np.ndarray]:
     return order, bounds
 
 
+# -- grouped receive-queue accounting ---------------------------------------
+
+def flat_orders(orders):
+    """Normalize a per-slot order spec to flat ``(slots, lens, ids)`` form.
+
+    ``orders`` is either already flat — ``slots`` strictly increasing,
+    ``ids`` the concatenated per-slot permutations of global message indices
+    in slot order, ``lens`` their lengths — or a dict mapping each slot to
+    its permutation (the per-receiver form, normalized here with one sort
+    and one concatenate).  Returns None when there is nothing custom.
+    """
+    if orders is None:
+        return None
+    if isinstance(orders, tuple):
+        slots, lens, ids = orders
+        slots = np.asarray(slots, dtype=np.int64)
+        if slots.size == 0:
+            return None
+        return (slots, np.asarray(lens, dtype=np.int64),
+                np.asarray(ids, dtype=np.int64))
+    if not orders:
+        return None
+    pairs = sorted((int(s), np.asarray(v, dtype=np.int64))
+                   for s, v in orders.items())
+    return (np.asarray([s for s, _ in pairs], dtype=np.int64),
+            np.asarray([v.size for _, v in pairs], dtype=np.int64),
+            np.concatenate([v for _, v in pairs]))
+
+
+def _assemble_orders(flat, slots, counts, cbounds, local, group,
+                     describe) -> np.ndarray:
+    """Region-local permutation array for every custom slot, in slot order.
+
+    ``flat`` is a normalized :func:`flat_orders` spec (or None); slots it
+    does not cover — and covered slots outside the custom set ``slots``,
+    mirroring the per-phase behaviour of silently ignoring orders for
+    receivers with no messages — default to array order.  Assembly and
+    validation (length, destination, permutation) are single vectorized
+    passes.
+    """
+    out = segmented_arange(counts)                    # default: array order
+    if flat is None:
+        return out
+    pslots, lens, ids_cat = flat
+    keep = np.isin(pslots, slots, assume_unique=True)
+    if not keep.all():
+        sel = np.repeat(keep, lens)
+        pslots, lens, ids_cat = pslots[keep], lens[keep], ids_cat[sel]
+    if pslots.size == 0:
+        return out
+    rank = np.searchsorted(slots, pslots)             # position among customs
+    bad = np.nonzero(lens != counts[rank])[0]
+    if bad.size:
+        raise ValueError(
+            f"order for {describe(int(pslots[bad[0]]))} must be a "
+            f"permutation of the {int(counts[rank[bad[0]]])} message "
+            f"indices destined to it")
+    slot_rep = np.repeat(pslots, lens)
+    rank_rep = np.repeat(rank, lens)
+    pos = cbounds[rank_rep] + segmented_arange(lens)
+    ok = group[ids_cat] == slot_rep           # ids destined to another slot?
+    if not ok.all():
+        bad = int(np.argmax(~ok))
+        raise ValueError(
+            f"order for {describe(int(slot_rep[bad]))} must be a "
+            f"permutation of the message indices destined to it")
+    vals = local[ids_cat]                     # in [0, counts[slot]) given ok
+    hits = np.bincount(cbounds[rank_rep] + vals, minlength=int(cbounds[-1]))
+    if hits.max(initial=0) > 1:
+        bad = int(np.argmax(hits[cbounds[rank_rep] + vals] > 1))
+        raise ValueError(
+            f"order for {describe(int(slot_rep[bad]))} must be a "
+            f"permutation of the message indices destined to it")
+    out[pos] = vals
+    return out
+
+
+def grouped_queue_steps(group, n_slots, recv_post_order=None,
+                        arrival_order=None, groups=None,
+                        describe=None) -> np.ndarray:
+    """Exact receive-queue traversal-step totals for many receiver slots.
+
+    ``group[i]`` is the receiver slot of message ``i`` (a process id, or a
+    packed ``(phase, process)`` key for a stacked sweep).  The order specs
+    give each custom slot a permutation of the global indices of its
+    messages — posting order and envelope-arrival order — as a dict or in
+    the flat :func:`flat_orders` form; missing slots use array order (one
+    step per arrival).  All custom slots pay the exact Fenwick walk in one
+    batched sweep; assembly and validation of the custom permutations are
+    vectorized (:func:`_assemble_orders`).
+
+    ``groups`` optionally supplies a precomputed ``(order, bounds)`` stable
+    grouping (e.g. :meth:`repro.comm.CommPhase.receiver_groups`); ``describe``
+    renders a slot id in error messages.
+    """
+    group = np.asarray(group, dtype=np.int64)
+    if describe is None:
+        describe = "receiver {}".format
+    if groups is not None:
+        order, bounds = groups
+    else:
+        order, bounds = group_by_receiver(group, n_slots)
+    counts = np.diff(bounds)
+    qsteps = counts.astype(np.int64).copy()           # array order: 1/arrival
+    if group.size == 0:
+        return qsteps
+    post = flat_orders(recv_post_order)
+    arr = flat_orders(arrival_order)
+    if post is None and arr is None:
+        return qsteps
+    cand = (post[0] if arr is None else
+            arr[0] if post is None else np.union1d(post[0], arr[0]))
+    cand = cand[(cand >= 0) & (cand < n_slots)]
+    slots = cand[counts[cand] > 0]                    # silent slots excluded
+    if slots.size == 0:
+        return qsteps
+    # local index of every message within its slot's group
+    local = np.empty(group.size, dtype=np.int64)
+    local[order] = np.arange(group.size) - np.repeat(bounds[:-1], counts)
+    ccounts = counts[slots]
+    cbounds = np.concatenate([[0], np.cumsum(ccounts)])
+    posted = _assemble_orders(post, slots, ccounts, cbounds, local, group,
+                              describe)
+    arrive = _assemble_orders(arr, slots, ccounts, cbounds, local, group,
+                              describe)
+    steps = batched_queue_traversal_steps(posted, arrive, cbounds)
+    qsteps[slots] = np.add.reduceat(steps, cbounds[:-1])
+    return qsteps
+
+
 # -- receive-queue walk ------------------------------------------------------
 
 class _Fenwick:
@@ -165,42 +295,59 @@ def queue_traversal_steps(posted_order, arrival_order) -> np.ndarray:
     return steps
 
 
-def _prefix_many(tree: np.ndarray, i: np.ndarray) -> np.ndarray:
-    """Fenwick prefix sums for an array of 1-based indices."""
+def _prefix_many(tree: np.ndarray, base: np.ndarray, i: np.ndarray,
+                 depth: int) -> np.ndarray:
+    """Fenwick prefix sums for an array of region-local 1-based indices.
+
+    ``base[r]`` offsets region r's private tree inside the shared ``tree``
+    array; the Fenwick index arithmetic runs on the *local* index, so walk
+    depth is the bit-length of the region's padded span, not the global
+    one.  Maskless: an index that reaches 0 stays 0 (``0 & -0 == 0``) and
+    keeps adding the region's always-zero slot 0 — pure gathers, no
+    reductions.
+    """
     i = np.array(i, dtype=np.int64, copy=True)
     out = np.zeros(i.shape, dtype=np.int64)
-    while True:
-        m = i > 0
-        if not m.any():
-            return out
-        im = i[m]
-        out[m] += tree[im]
-        i[m] = im - (im & -im)
+    for _ in range(depth):
+        out += tree[base + i]
+        i -= i & -i
+    return out
 
 
-def _add_many(tree: np.ndarray, i: np.ndarray, v: int) -> None:
-    """Fenwick point updates for an array of distinct 1-based indices."""
-    n = tree.size - 1
+def _add_many(tree: np.ndarray, base: np.ndarray, i: np.ndarray,
+              bound: np.ndarray, v: int, depth: int) -> None:
+    """Fenwick point updates for distinct region-local 1-based indices.
+
+    Maskless like :func:`_prefix_many`: a chain that climbs past its
+    region's padded span ``bound[r]`` parks at the shared sink slot (the
+    last tree cell, never read), so every round is one scatter-add plus
+    index arithmetic.
+    """
+    sink = tree.size - 1
     i = np.array(i, dtype=np.int64, copy=True)
-    while True:
-        m = i <= n
-        if not m.any():
-            return
-        im = i[m]
-        np.add.at(tree, im, v)              # ancestors may collide across slots
-        i[m] = im + (im & -im)
+    idx = base + i
+    for _ in range(depth):
+        np.add.at(tree, idx, v)             # ancestors may collide across slots
+        i += i & -i
+        idx = np.where(i > bound, sink, base + i)
 
 
 def batched_queue_traversal_steps(posted, arrival, bounds) -> np.ndarray:
-    """Queue-walk lengths for many receiving processes in one Fenwick sweep.
+    """Queue-walk lengths for many receiving processes in one batched sweep.
 
     Region ``r`` (one receiver) occupies slots ``bounds[r]:bounds[r+1]`` of
     the concatenated ``posted`` / ``arrival`` arrays, which hold region-local
     message indices.  Returns per-arrival steps in the same layout — equal to
-    stacking :func:`queue_traversal_steps` per region, but all regions advance
-    in lock-step: one round per arrival *depth*, each round a vectorized
-    prefix/remove over every still-active receiver.  Python-level work is
-    O(max msgs-per-receiver * log N) instead of O(total messages).
+    stacking :func:`queue_traversal_steps` per region.
+
+    All regions advance in lock-step: one round per arrival *depth*, each
+    round one maskless vectorized Fenwick prefix + one removal over every
+    still-active receiver.  Every region owns a private Fenwick tree (padded
+    to a power of two) inside one shared array, so walk depth is the
+    bit-length of the *largest region*, not of the whole sweep, and the walk
+    length is a single local prefix (no start-offset subtraction).
+    Python-level work is O(max msgs-per-receiver * log max msgs-per-receiver)
+    rounds-times-depth, with every array op spanning all active receivers.
     """
     posted = np.asarray(posted, dtype=np.int64)
     arrival = np.asarray(arrival, dtype=np.int64)
@@ -215,17 +362,29 @@ def batched_queue_traversal_steps(posted, arrival, bounds) -> np.ndarray:
     start_of = starts[region_of]
     pos = np.empty(N, dtype=np.int64)                 # local id -> local slot
     pos[start_of + posted] = np.arange(N) - start_of
-    idx = np.arange(N + 1, dtype=np.int64)
-    tree = idx & -idx                                 # all-ones Fenwick
-    tree[0] = 0
+    b = pos[start_of + arrival]                       # slot of j-th arrival
+    # private per-region Fenwick trees in one shared array: region r owns
+    # slots [toff[r], toff[r] + span[r]] (local 0 is its always-zero root),
+    # spans padded to powers of two, one shared sink slot at the very end
+    span = np.ones(counts.size, dtype=np.int64)
+    while (span < counts).any():
+        span = np.where(span < counts, span * 2, span)
+    blk = span + 1
+    toff = np.concatenate([[0], np.cumsum(blk)])
+    tree = np.zeros(toff[-1] + 1, dtype=np.int64)     # +1: shared sink
+    li = segmented_arange(blk)                        # local 0..span per region
+    c_rep = np.repeat(counts, blk)
+    lo = li - (li & -li)
+    tree[:-1] = np.minimum(li, c_rep) - np.minimum(lo, c_rep)
+    depth = int(span.max()).bit_length()              # chains: <= log2 + 1
     regions = np.nonzero(counts)[0]
     for j in range(int(counts.max())):
         act = regions[counts[regions] > j]
         if act.size == 0:
             break
         s = starts[act]
-        mid = arrival[s + j]                          # j-th arrival per region
-        p = s + pos[s + mid] + 1                      # global 1-based slot
-        steps[s + j] = _prefix_many(tree, p) - _prefix_many(tree, s)
-        _add_many(tree, p, -1)
+        p = b[s + j] + 1                              # local 1-based slot
+        base = toff[act]
+        steps[s + j] = _prefix_many(tree, base, p, depth)
+        _add_many(tree, base, p, span[act], -1, depth)
     return steps

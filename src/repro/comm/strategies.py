@@ -50,6 +50,7 @@ import numpy as np
 
 from .phase import CommPhase
 from .primitives import segmented_arange, sum_by_pairs
+from .stack import as_stack
 
 STRATEGIES = ("standard", "two_step", "three_step")
 
@@ -295,38 +296,80 @@ def best_strategy(pattern, machine=None, *, strategies=STRATEGIES,
     arrival, seeded); ``'posted'`` uses best-case in-order arrival.  The
     model prices phases at ladder ``level``; ``params`` substitutes a fitted
     parameter table for the machine's ground truth on the model side only.
+
+    The whole candidate set — every strategy's phase sequence — is priced in
+    one stacked model pass and one stacked simulator pass: this is the
+    one-pattern case of :func:`best_strategy_many`.
+    """
+    return best_strategy_many([pattern], machine, strategies=strategies,
+                              level=level, arrival=arrival, seed=seed,
+                              params=params)[0]
+
+
+def best_strategy_many(patterns, machine=None, *, strategies=STRATEGIES,
+                       level: str = "contention", arrival: str = "random",
+                       seed: int = 0, params=None) -> list[StrategyVerdict]:
+    """:func:`best_strategy` for a whole sweep of patterns in ONE arena.
+
+    Every (pattern, strategy) candidate's phase sequence is rewritten and
+    concatenated into a single :class:`~repro.comm.PhaseStack`, then the
+    model ladder and the simulator each price the entire candidate set in
+    one segmented pass — the strategy-sweep analogue of
+    :func:`repro.core.models.phase_cost_many`.  Results are element-wise
+    identical to ``[best_strategy(p, ...) for p in patterns]`` (each
+    candidate keeps its own seeded arrival stream); only the number of
+    arena walks changes.
     """
     if arrival not in ("random", "posted"):
         raise ValueError(f"unknown arrival regime {arrival!r}; "
                          "expected 'random' or 'posted'")
-    # lazy: repro.core.models / repro.net.simulator both import repro.comm
-    from repro.core.models import sequence_cost
-    from repro.net.simulator import simulate_sequence
+    from repro.core.models import phase_cost_many
+    from repro.net.simulator import simulate_many
 
-    if hasattr(pattern, "bind"):
-        if machine is None:
-            raise ValueError("a CommPattern needs a machine to bind to")
-        phase = pattern.bind(machine)
-    elif machine is not None and machine is not pattern.machine:
-        # a bound phase caches machine-derived arrays: sweeping machines
-        # means rebinding the message set, not reusing the stale cache
-        phase = CommPhase.build(machine, pattern.src, pattern.dst,
-                                pattern.size, n_procs=pattern.n_procs)
-    else:
-        phase = pattern
+    phases = []
+    for pat in patterns:
+        if hasattr(pat, "bind"):
+            if machine is None:
+                raise ValueError("a CommPattern needs a machine to bind to")
+            phases.append(pat.bind(machine))
+        elif machine is not None and machine is not pat.machine:
+            phases.append(CommPhase.build(machine, pat.src, pat.dst,
+                                          pat.size, n_procs=pat.n_procs))
+        else:
+            phases.append(pat)
 
-    plans, model, sim = {}, {}, {}
-    for name in strategies:
-        plan = rewrite(phase, name)
-        rng = np.random.default_rng(seed)
-        arrivals = ([ph.random_arrival_order(rng) for ph in plan.phases]
-                    if arrival == "random" else None)
-        plans[name] = plan
-        model[name] = sequence_cost(plan.phases, level=level,
-                                    params=params).total
-        sim[name] = simulate_sequence(plan.phases,
-                                      arrival_orders=arrivals).time
-    return StrategyVerdict(
-        plans=plans, model=model, sim=sim,
-        model_winner=min(model, key=model.get),
-        sim_winner=min(sim, key=sim.get))
+    plan_rows, spans, all_phases, all_arrivals = [], [], [], []
+    for phase in phases:
+        plans, row_spans = {}, {}
+        for name in strategies:
+            plan = rewrite(phase, name)
+            rng = np.random.default_rng(seed)
+            plans[name] = plan
+            row_spans[name] = slice(len(all_phases),
+                                    len(all_phases) + plan.n_phases)
+            all_phases.extend(plan.phases)
+            all_arrivals.extend([ph.random_arrival_flat(rng)
+                                 for ph in plan.phases]
+                                if arrival == "random"
+                                else [None] * plan.n_phases)
+        plan_rows.append(plans)
+        spans.append(row_spans)
+    # one shared arena for both passes; mixed-machine candidate sets (bound
+    # phases from different machines) fall back to the per-phase loop, same
+    # policy as every batched entry point
+    stack = as_stack(all_phases)
+    if stack is None:
+        stack = all_phases
+    costs = phase_cost_many(stack, level=level, params=params)
+    sims = simulate_many(stack, arrival_orders=all_arrivals)
+    out = []
+    for plans, row_spans in zip(plan_rows, spans):
+        model = {name: sum(c.total for c in costs[row_spans[name]])
+                 for name in plans}
+        sim = {name: sum(r.time for r in sims[row_spans[name]])
+               for name in plans}
+        out.append(StrategyVerdict(
+            plans=plans, model=model, sim=sim,
+            model_winner=min(model, key=model.get),
+            sim_winner=min(sim, key=sim.get)))
+    return out

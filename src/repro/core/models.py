@@ -23,6 +23,7 @@ import dataclasses
 import numpy as np
 
 from repro.comm.primitives import active_senders_per_node, transport_times
+from repro.comm.stack import PhaseStack, as_stack
 
 from .params import CommParams
 from .topology import contention_ell
@@ -195,18 +196,94 @@ def phase_cost_phase(phase, level: str = "contention",
                       active_ppn=ppn)
 
 
+def _stack_costs(stack: PhaseStack, level: str,
+                 params: CommParams | None,
+                 backend: str | None = None,
+                 agg_cache: dict | None = None) -> list[CostBreakdown]:
+    """Price a stacked sweep: one segmented pass per quantity, bit-identical
+    to the :func:`phase_cost_phase` loop (see DESIGN.md §8).
+
+    ``agg_cache`` memoizes the raw aggregates by (node_aware, use_maxrate):
+    the three ladder levels at or above ``node_aware`` share the exact same
+    transport pass, so a full-ladder sweep prices messages three times, not
+    five (queue/net aggregates are level-independent stack caches anyway).
+    """
+    if stack.n_phases == 0:
+        return []
+    m = stack.machine
+    p = params if params is not None else m.params
+    rank = MODEL_LEVELS.index(level)
+    with_queue = rank >= MODEL_LEVELS.index("queue")
+    with_cont = level == "contention" and m.torus.size > 1
+    flags = (rank >= MODEL_LEVELS.index("node_aware"),
+             rank >= MODEL_LEVELS.index("maxrate"))
+    if agg_cache is not None and flags in agg_cache:
+        transport, max_recv, net_bytes = agg_cache[flags]
+    else:
+        transport, max_recv, net_bytes = stack.cost_arrays(
+            p, node_aware=flags[0], use_maxrate=flags[1],
+            # when memoizing, request the (cached, level-independent) queue
+            # counts up front: the queue/contention levels reuse this entry.
+            # Net bytes only matter on the node-aware branch — the levels
+            # below never serve a contention row.
+            with_queue=with_queue or agg_cache is not None,
+            with_net_bytes=with_cont or (agg_cache is not None and flags[0]),
+            backend=backend)
+        if agg_cache is not None:
+            agg_cache[flags] = (transport, max_recv, net_bytes)
+    queue = queue_time(p, max_recv) if with_queue else np.zeros_like(transport)
+    cont = np.zeros_like(transport)
+    if with_cont:
+        b = net_bytes / stack.n_procs    # avg bytes sent per process
+        ell = contention_ell(m.torus.size, m.torus.ndim, b,
+                             m.procs_per_torus_node)
+        cont = np.where(net_bytes > 0.0, p.delta * ell, 0.0)
+    return [CostBreakdown(float(t), float(q), float(c), float(t) + float(q)
+                          + float(c))
+            for t, q, c in zip(transport, queue, cont)]
+
+
 def phase_cost_many(phases, level: str = "contention",
-                    params: CommParams | None = None) -> list[CostBreakdown]:
+                    params: CommParams | None = None,
+                    backend: str | None = None) -> list[CostBreakdown]:
     """Price a whole sweep of phases (an AMG hierarchy, a partition or
-    machine scan) in one call, reusing each phase's cached arrays."""
-    return [phase_cost_phase(ph, level=level, params=params) for ph in phases]
+    machine scan) in one call.
+
+    Fast path: phases bound to one machine (or an already-built
+    :class:`repro.comm.PhaseStack`) are priced in one segmented pass via the
+    stacked arena — bit-identical to the per-phase loop, which remains the
+    fallback for single phases and mixed-machine sweeps.
+    """
+    if level not in MODEL_LEVELS:
+        raise ValueError(f"unknown model level {level!r}")
+    if not isinstance(phases, PhaseStack):
+        phases = list(phases)
+    stack = as_stack(phases)
+    if stack is None:
+        return [phase_cost_phase(ph, level=level, params=params)
+                for ph in phases]
+    return _stack_costs(stack, level, params, backend=backend)
 
 
-def model_ladder_many(phases, params: CommParams | None = None
+def model_ladder_many(phases, params: CommParams | None = None,
+                      backend: str | None = None
                       ) -> list[dict[str, CostBreakdown]]:
-    """Evaluate the full model ladder on a sweep of phases."""
-    return [{lvl: phase_cost_phase(ph, level=lvl, params=params)
-             for lvl in MODEL_LEVELS} for ph in phases]
+    """Evaluate the full model ladder on a sweep of phases: the arena is
+    stacked once and swept once per ladder level."""
+    if not isinstance(phases, PhaseStack):
+        phases = list(phases)
+    stack = as_stack(phases)
+    if stack is None:
+        return [{lvl: phase_cost_phase(ph, level=lvl, params=params)
+                 for lvl in MODEL_LEVELS} for ph in phases]
+    out: list[dict[str, CostBreakdown]] = [{} for _ in range(stack.n_phases)]
+    agg_cache: dict = {}
+    for lvl in MODEL_LEVELS:
+        for row, cb in zip(out, _stack_costs(stack, lvl, params,
+                                             backend=backend,
+                                             agg_cache=agg_cache)):
+            row[lvl] = cb
+    return out
 
 
 def sequence_cost(phases, level: str = "contention",

@@ -1,0 +1,177 @@
+"""Optional JAX / Pallas backends for the PhaseStack segmented reductions.
+
+The stacked sweep engine (:mod:`repro.comm.stack`) reduces per-message
+quantities to per-(phase, process) / per-(phase, link) aggregates with two
+primitives: segmented sum and segmented max over packed integer keys.  This
+module provides accelerator implementations of exactly those two:
+
+``backend='jax'``
+    ``jax.ops.segment_sum`` / ``segment_max`` under ``jax.jit`` — the
+    scalable path (scatter-add, O(total messages)).
+``backend='pallas'``
+    A Pallas segment-reduce kernel: the message stream is chunked, each
+    ``(segment-block, chunk)`` grid step builds the chunk's one-hot
+    membership matrix against its 128-wide segment block and reduces it on
+    the MXU (``values @ one_hot`` for sums, a masked row-max for maxima),
+    accumulating across chunks in the resident output block — the
+    flash-attention accumulate idiom.  O(messages x segments) work: it is
+    the MXU-shaped demonstration/parity backend, not the scalable one.
+
+numpy is the default everywhere and the silent fallback when jax is absent
+(:func:`resolve_backend` warns once).  Backend parity is *allclose*, not
+bit-equal: the accelerator paths run float32 (tests pin the tolerance).
+
+This module imports jax lazily so that importing it — and everything in
+:mod:`repro.comm` — stays numpy-only.
+"""
+from __future__ import annotations
+
+import functools
+import warnings
+
+import numpy as np
+
+BACKENDS = ("numpy", "jax", "pallas")
+
+_CHUNK = 512        # messages per grid step
+_SEG_BLOCK = 128    # segments per output block (one lane tile)
+
+
+def have_jax() -> bool:
+    try:
+        import jax  # noqa: F401
+        return True
+    except Exception:  # pragma: no cover - environment-dependent
+        return False
+
+
+def resolve_backend(backend: str) -> str:
+    """Validate a backend name; fall back to numpy (with a warning) when the
+    accelerator stack is unavailable."""
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown stack backend {backend!r}; expected one of {BACKENDS}")
+    if backend != "numpy" and not have_jax():
+        warnings.warn(f"stack backend {backend!r} requested but jax is not "
+                      "importable; falling back to numpy", RuntimeWarning,
+                      stacklevel=2)
+        return "numpy"
+    return backend
+
+
+# -- jitted segment reductions ----------------------------------------------
+
+@functools.cache
+def _jax_segment_ops():
+    import jax
+
+    @functools.partial(jax.jit, static_argnames=("n_seg",))
+    def seg_sum(vals, ids, n_seg):
+        return jax.ops.segment_sum(vals, ids, num_segments=n_seg)
+
+    @functools.partial(jax.jit, static_argnames=("n_seg",))
+    def seg_max(vals, ids, n_seg):
+        return jax.ops.segment_max(vals, ids, num_segments=n_seg)
+
+    return seg_sum, seg_max
+
+
+# -- Pallas segment-reduce kernel --------------------------------------------
+
+def _segreduce_kernel(ids_ref, vals_ref, out_ref, *, op: str):
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    sb, c = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        fill = 0.0 if op == "sum" else -jnp.inf
+        out_ref[...] = jnp.full_like(out_ref, fill)
+
+    ids = ids_ref[0, :]                                   # [M]
+    vals = vals_ref[0, :]                                 # [M]
+    m, s = ids.shape[0], out_ref.shape[1]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (m, s), 1) + sb * s
+    member = ids[:, None] == cols                         # [M, S] one-hot
+    if op == "sum":
+        out_ref[...] += jnp.dot(vals[None, :],
+                                member.astype(vals.dtype))
+    else:
+        part = jnp.max(jnp.where(member, vals[:, None], -jnp.inf),
+                       axis=0)                            # [S]
+        out_ref[...] = jnp.maximum(out_ref[...], part[None, :])
+
+
+@functools.cache
+def _pallas_segreduce(n_pad: int, s_pad: int, op: str):
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    grid = (s_pad // _SEG_BLOCK, n_pad // _CHUNK)
+    return pl.pallas_call(
+        functools.partial(_segreduce_kernel, op=op),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, _CHUNK), lambda sb, c: (0, c)),
+            pl.BlockSpec((1, _CHUNK), lambda sb, c: (0, c)),
+        ],
+        out_specs=pl.BlockSpec((1, _SEG_BLOCK), lambda sb, c: (0, sb)),
+        out_shape=jax.ShapeDtypeStruct((1, s_pad), jnp.float32),
+        interpret=jax.default_backend() == "cpu",
+    )
+
+
+def _pallas_reduce(values, seg_ids, n_seg: int, op: str) -> np.ndarray:
+    import jax.numpy as jnp
+
+    n = values.size
+    n_pad = max(_CHUNK, -(-n // _CHUNK) * _CHUNK)
+    s_pad = max(_SEG_BLOCK, -(-n_seg // _SEG_BLOCK) * _SEG_BLOCK)
+    ids = np.full((1, n_pad), -1, dtype=np.int32)         # -1 matches no block
+    ids[0, :n] = seg_ids
+    vals = np.zeros((1, n_pad), dtype=np.float32)
+    vals[0, :n] = values
+    out = _pallas_segreduce(n_pad, s_pad, op)(jnp.asarray(ids),
+                                              jnp.asarray(vals))
+    out = np.asarray(out)[0, :n_seg].astype(np.float64)
+    if op == "max":
+        out[np.isneginf(out)] = 0.0                       # empty segments
+    return out
+
+
+# -- public entry points -----------------------------------------------------
+
+def segment_sum(values, seg_ids, n_seg: int, backend: str = "numpy") -> np.ndarray:
+    """Sum ``values`` into ``n_seg`` bins by ``seg_ids`` on the chosen backend."""
+    values = np.asarray(values, dtype=np.float64)
+    seg_ids = np.asarray(seg_ids, dtype=np.int64)
+    if backend == "numpy":
+        return np.bincount(seg_ids, weights=values, minlength=n_seg)
+    if backend == "pallas":
+        return _pallas_reduce(values, seg_ids, n_seg, "sum")
+    import jax.numpy as jnp
+    seg_sum, _ = _jax_segment_ops()
+    return np.asarray(seg_sum(jnp.asarray(values, jnp.float32),
+                              jnp.asarray(seg_ids), n_seg), dtype=np.float64)
+
+
+def segment_max(values, seg_ids, n_seg: int, backend: str = "numpy") -> np.ndarray:
+    """Per-segment maximum (0.0 for empty segments, matching the stacked
+    contention reduction where all inputs are non-negative byte counts)."""
+    values = np.asarray(values, dtype=np.float64)
+    seg_ids = np.asarray(seg_ids, dtype=np.int64)
+    if backend == "numpy":
+        out = np.zeros(n_seg)
+        np.maximum.at(out, seg_ids, values)
+        return out
+    if backend == "pallas":
+        return _pallas_reduce(values, seg_ids, n_seg, "max")
+    import jax.numpy as jnp
+    _, seg_max = _jax_segment_ops()
+    out = np.asarray(seg_max(jnp.asarray(values, jnp.float32),
+                             jnp.asarray(seg_ids), n_seg), dtype=np.float64)
+    out[np.isneginf(out)] = 0.0
+    return out

@@ -28,7 +28,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.comm import CommPhase
+from repro.comm import CommPhase, PhaseStack
+from repro.comm.stack import as_stack
 from repro.comm.primitives import (per_proc_sums, queue_traversal_steps,
                                    transport_times)
 
@@ -61,7 +62,19 @@ def simulate(phase: CommPhase,
     (into src/dst/size) of messages destined to process ``p``, giving the
     order receives are posted and envelopes arrive.  Default: array order for
     both (best case, O(n) queue cost).
+
+    ``noise`` multiplies the total by a lognormal factor drawn from ``rng``.
+    The generator is owned by the *sweep*: create it once (e.g.
+    ``np.random.default_rng(seed)``) and thread it through every call, as
+    :func:`simulate_many` and the ping-pong harnesses do — a per-call default
+    would re-seed on every call and make repeated noisy calls draw identical
+    noise.
     """
+    if noise > 0.0 and rng is None:
+        raise ValueError(
+            "noise > 0 needs an explicit rng, created once at the sweep "
+            "level (a per-call default would redraw the same noise); "
+            "simulate_many seeds np.random.default_rng(0) for you")
     if phase.n_msgs == 0:
         z = np.zeros(0)
         return PhaseResult(0.0, 0.0, 0.0, 0.0, z, z, 0.0, 0.0)
@@ -86,7 +99,6 @@ def simulate(phase: CommPhase,
 
     total = transport + queue + contention
     if noise > 0.0:
-        rng = rng or np.random.default_rng(0)
         total *= float(np.exp(rng.normal(0.0, noise)))
     return PhaseResult(total, transport, queue, contention,
                        per_proc, qsteps, max_link, net_bytes)
@@ -133,6 +145,34 @@ def simulate_phase(machine: MachineSpec, src, dst, size,
                     arrival_order=arrival_order, rng=rng, noise=noise)
 
 
+def _simulate_stack(stack: PhaseStack, recv_post_orders,
+                    arrival_orders) -> list[PhaseResult]:
+    """Price a stacked sweep's raw aggregates into PhaseResult rows.
+
+    One segmented pass per quantity (transport sums, queue steps, link
+    contention) over the whole arena — bit-identical to per-phase
+    :func:`simulate` (DESIGN.md §8)."""
+    if stack.n_phases == 0:
+        return []
+    params = stack.machine.params
+    raw = stack.sim_arrays(recv_post_orders=recv_post_orders,
+                           arrival_orders=arrival_orders)
+    out = []
+    for i in range(stack.n_phases):
+        if stack.phases[i].n_msgs == 0:
+            z = np.zeros(0)
+            out.append(PhaseResult(0.0, 0.0, 0.0, 0.0, z, z, 0.0, 0.0))
+            continue
+        transport = float(raw.transport[i])
+        queue = params.gamma * float(raw.qsteps[i].max(initial=0))
+        contention = params.delta * float(raw.max_link[i])
+        out.append(PhaseResult(
+            transport + queue + contention, transport, queue, contention,
+            raw.per_proc[i], raw.qsteps[i],
+            float(raw.max_link[i]), float(raw.net_bytes[i])))
+    return out
+
+
 def simulate_many(phases,
                   recv_post_orders=None,
                   arrival_orders=None,
@@ -142,15 +182,31 @@ def simulate_many(phases,
     partition or machine scan) in one call.
 
     ``recv_post_orders[i]`` / ``arrival_orders[i]`` apply to ``phases[i]``;
-    a single shared ``rng`` drives the noise stream across the whole sweep.
+    a single shared ``rng`` drives the noise stream across the whole sweep
+    (default: ``np.random.default_rng(0)``, created once per call so the
+    sweep is reproducible — pass your own generator to chain sweeps).
+
+    Fast path: phases bound to one machine (or an already-built
+    :class:`repro.comm.PhaseStack`) are simulated in one segmented pass over
+    the stacked arena, bit-identical to the per-phase loop; single phases
+    and mixed-machine sweeps fall back to :func:`simulate`.
     """
     if noise > 0.0 and rng is None:
         rng = np.random.default_rng(0)
-    out = []
-    for i, ph in enumerate(phases):
-        out.append(simulate(
-            ph,
-            recv_post_order=recv_post_orders[i] if recv_post_orders else None,
-            arrival_order=arrival_orders[i] if arrival_orders else None,
-            rng=rng, noise=noise))
-    return out
+    if not isinstance(phases, PhaseStack):
+        phases = list(phases)
+    stack = as_stack(phases)
+    if stack is not None:
+        out = _simulate_stack(stack, recv_post_orders, arrival_orders)
+        if noise > 0.0:
+            # same draw order as the per-phase loop, which returns early for
+            # empty phases without touching the rng
+            for r, ph in zip(out, stack.phases):
+                if ph.n_msgs:
+                    r.time *= float(np.exp(rng.normal(0.0, noise)))
+        return out
+    return [simulate(
+        ph,
+        recv_post_order=recv_post_orders[i] if recv_post_orders else None,
+        arrival_order=arrival_orders[i] if arrival_orders else None,
+        rng=rng, noise=noise) for i, ph in enumerate(phases)]

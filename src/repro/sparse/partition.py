@@ -23,7 +23,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.comm import CommPhase
+from repro.comm import CommPhase, PhaseStack
 
 from .csr import CSR
 
@@ -98,6 +98,19 @@ class CommPattern:
         winner plus the simulator's verdict (:func:`repro.comm.best_strategy`)."""
         from repro.comm.strategies import best_strategy
         return best_strategy(self, machine, **kw)
+
+
+def stack_patterns(patterns, machine) -> PhaseStack:
+    """Bind a sweep of :class:`CommPattern` objects (an AMG hierarchy, a
+    partition scan) to one machine as a single :class:`repro.comm.PhaseStack`.
+
+    The stack is the fast-path input of the batched entry points: pass it
+    straight to :func:`repro.core.models.phase_cost_many` /
+    :func:`repro.core.models.model_ladder_many` /
+    :func:`repro.net.simulator.simulate_many` to sweep every pattern in one
+    segmented pass per quantity.
+    """
+    return PhaseStack.build([p.bind(machine) for p in patterns])
 
 
 def _needed_pairs(A: CSR, part: RowPartition) -> tuple[np.ndarray, np.ndarray]:
