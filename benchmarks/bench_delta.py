@@ -1,0 +1,116 @@
+"""Delta-vs-rebuild benchmarks: incremental re-pricing as a search engine.
+
+Two rows:
+
+``delta_local_search_64``
+    A 64-move boundary-shift local search on the elasticity-like operator
+    (the paper's application class) priced two ways over the *identical*
+    candidate sequence: through the :class:`repro.comm.DeltaStack` /
+    :func:`repro.sparse.spmv_comm_pattern_delta` incremental path, and by
+    replaying the recorded candidate partitions with full per-candidate
+    reconstruction (fresh ``spmv_comm_pattern`` + ``CommPhase.build`` +
+    pricing).  Replaying — rather than running a second independent search —
+    pins both sides to the same candidates by construction, so an ulp-level
+    cost tie can never fork the accept decisions and flake the comparison.
+    Every candidate's modeled cost is asserted allclose between the two
+    pricers before timing counts; ``derived`` is the rebuild/delta speedup
+    (the ``perf_smoke`` CI gate fails if it ever drops below 1.0 —
+    incremental must never lose).  The rebuild timing is generous to
+    rebuild: it excludes all search bookkeeping, pure pricing only.
+
+``delta_amg_optimize``
+    The new-scenario row: run :func:`repro.sparse.optimize_partition` on
+    every level of a Poisson AMG hierarchy and report the end-to-end wall
+    time with the summed modeled cost reduction as ``derived`` — the
+    optimization trace the quickstart example prints per level.
+
+Run directly for a CSV::
+
+    PYTHONPATH=src python -m benchmarks.bench_delta
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _search_kwargs():
+    from repro.sparse import elasticity_like_3d
+    return elasticity_like_3d(12), dict(n_procs=512, moves=64, seed=0,
+                                        level="contention")
+
+
+def bench_delta_local_search():
+    from repro.core.models import phase_cost_many
+    from repro.net import blue_waters_machine
+    from repro.sparse import RowPartition, optimize_partition, \
+        spmv_comm_pattern
+
+    machine = blue_waters_machine((4, 2, 2))
+    A, kw = _search_kwargs()
+
+    def run_delta():
+        return optimize_partition(A, machine, **kw)
+
+    def replay_rebuild(moves):
+        """Rebuild-per-candidate over the recorded candidate partitions."""
+        out = []
+        for mv in moves:
+            if np.isnan(mv.cost):            # infeasible: never priced
+                out.append(float("nan"))
+                continue
+            phase = spmv_comm_pattern(A, RowPartition(mv.starts)) \
+                .bind(machine)
+            out.append(phase_cost_many([phase], level=kw["level"])[0].total)
+        return out
+
+    # correctness first: rebuild pricing of the identical candidates must
+    # agree with what the delta pricer recorded
+    res = run_delta()
+    costs_d = np.asarray([m.cost for m in res.moves])
+    costs_r = np.asarray(replay_rebuild(res.moves))
+    assert np.array_equal(np.isnan(costs_d), np.isnan(costs_r))
+    assert np.allclose(np.nan_to_num(costs_d), np.nan_to_num(costs_r),
+                       rtol=1e-9), "delta pricer drifted from rebuild"
+
+    best_d = best_r = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        res = run_delta()
+        best_d = min(best_d, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        replay_rebuild(res.moves)
+        best_r = min(best_r, time.perf_counter() - t0)
+    return [("delta_local_search_64", best_d * 1e6, best_r / best_d)]
+
+
+def bench_delta_amg_optimize():
+    from repro.net import blue_waters_machine
+    from repro.sparse import build_hierarchy, poisson_3d, optimize_partition
+
+    machine = blue_waters_machine((4, 2, 2))
+    levels = build_hierarchy(poisson_3d(14), theta=0.25)
+    t0 = time.perf_counter()
+    before = after = 0.0
+    for lvl in levels:
+        if lvl.A.n_rows < 4:        # too coarse for two non-empty blocks
+            continue
+        n_procs = min(256, lvl.A.n_rows // 2)
+        res = optimize_partition(lvl.A, machine, n_procs=n_procs,
+                                 moves=48, seed=0)
+        before += res.initial_cost
+        after += res.cost
+    us = (time.perf_counter() - t0) * 1e6
+    reduction = 0.0 if before <= 0 else 1.0 - after / before
+    return [("delta_amg_optimize", us, reduction)]
+
+
+ALL_BENCHES = [bench_delta_local_search, bench_delta_amg_optimize]
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for bench in ALL_BENCHES:
+        for name, us, derived in bench():
+            print(f"{name},{us:.1f},{derived:.6g}", flush=True)

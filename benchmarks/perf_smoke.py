@@ -1,26 +1,33 @@
-"""CI perf smoke: the PhaseStack sweep path must never lose to the loop.
+"""CI perf smoke: the fast paths must never lose to their reference paths.
 
-Checks the ``stack_*`` rows of :mod:`benchmarks.bench_kernels` (stacked
-sweep vs per-phase loop on the AMG hierarchy x partition scan, bit-identity
-asserted inside the bench) and fails if any stacked path is slower than its
-per-phase loop path.  The threshold is 1.0x — deliberately far below the
-typical speedups — so CI-runner throttling noise cannot flake the gate while
-a real regression (the stack falling back to the loop, a cache being lost,
-a reduction going quadratic) still trips it.
+Two gates, both thresholded at 1.0x — deliberately far below the typical
+speedups, so CI-runner throttling noise cannot flake the gate while a real
+regression still trips it:
+
+* the ``stack_*`` rows of :mod:`benchmarks.bench_kernels` (stacked sweep vs
+  per-phase loop on the AMG hierarchy x partition scan, bit-identity
+  asserted inside the bench) — the PhaseStack sweep path must never be
+  slower than the loop;
+* the ``delta_local_search_64`` row of :mod:`benchmarks.bench_delta`
+  (incremental re-pricing vs rebuild-per-candidate on the same 64-move
+  local search, candidate costs asserted allclose inside the bench) — the
+  DeltaStack path must never be slower than a full rebuild.
 
 Usage::
 
     python -m benchmarks.perf_smoke [bench.csv]
 
-With a CSV argument (the ``benchmarks.run`` output, as in CI) the gate is
-applied to its ``stack_*`` rows without re-running the workload; without one
-the benchmark is executed directly (local development).
+With a CSV argument (the ``benchmarks.run`` output, as in CI) the gates are
+applied to its rows without re-running the workloads; without one the
+benchmarks are executed directly (local development).
 """
 from __future__ import annotations
 
 import sys
 
 STACK_ROWS = ("stack_model_ladder", "stack_simulate", "stack_best_strategy")
+DELTA_ROWS = ("delta_local_search_64",)
+GATED_ROWS = STACK_ROWS + DELTA_ROWS
 
 
 def _rows_from_csv(path: str):
@@ -28,11 +35,12 @@ def _rows_from_csv(path: str):
     with open(path) as f:
         for line in f:
             parts = line.strip().split(",")
-            if parts and parts[0] in STACK_ROWS:
+            if parts and parts[0] in GATED_ROWS:
                 rows.append((parts[0], float(parts[1]), float(parts[2])))
-    if {name for name, _, _ in rows} != set(STACK_ROWS):
-        raise SystemExit(f"{path} is missing stack_* rows — did "
-                         "benchmarks.run fail before bench_phase_stack?")
+    missing = set(GATED_ROWS) - {name for name, _, _ in rows}
+    if missing:
+        raise SystemExit(f"{path} is missing gated rows {sorted(missing)} — "
+                         "did benchmarks.run fail before producing them?")
     return rows
 
 
@@ -40,12 +48,18 @@ def main() -> None:
     if len(sys.argv) > 1:
         rows = _rows_from_csv(sys.argv[1])
     else:
+        from .bench_delta import bench_delta_local_search
         from .bench_kernels import bench_phase_stack
-        rows = bench_phase_stack()
+        rows = bench_phase_stack() + bench_delta_local_search()
     failed = False
     for name, us, speedup in rows:
-        status = "ok" if speedup >= 1.0 else "SLOWER THAN LOOP"
-        print(f"{name}: {us:.0f} us/sweep, {speedup:.2f}x vs loop  [{status}]")
+        # stack rows report us per sweep evaluation; the delta row reports
+        # us for the whole 64-move search
+        ref, unit = (("loop", "us/sweep") if name in STACK_ROWS
+                     else ("rebuild", "us/search"))
+        status = "ok" if speedup >= 1.0 else f"SLOWER THAN {ref.upper()}"
+        print(f"{name}: {us:.0f} {unit}, {speedup:.2f}x vs {ref}  "
+              f"[{status}]")
         failed |= speedup < 1.0
     if failed:
         sys.exit(1)

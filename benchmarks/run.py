@@ -7,10 +7,10 @@ import traceback
 
 
 def main() -> None:
-    from . import bench_paper, bench_kernels, bench_roofline
+    from . import bench_paper, bench_kernels, bench_roofline, bench_delta
     print("name,us_per_call,derived")
     failures = 0
-    for mod in (bench_paper, bench_kernels, bench_roofline):
+    for mod in (bench_paper, bench_kernels, bench_roofline, bench_delta):
         for bench in mod.ALL_BENCHES:
             try:
                 for (name, us, derived) in bench():

@@ -22,8 +22,14 @@ for the reductions (:mod:`repro.kernels.comm_stack`).  The batched entry
 points (``phase_cost_many`` / ``model_ladder_many`` / ``simulate_many`` /
 ``best_strategy``) ride it automatically.
 
-See ``docs/api.md`` for the public API reference and DESIGN.md §1/§7/§8 for
-the architecture.
+:mod:`repro.comm.delta` lifts sweeps to *search*: a :class:`DeltaStack`
+wraps the same arena and re-prices ``apply(removed, added)`` mutations at
+O(changed) cost — bit-identical to a fresh build — so model-guided local
+search (:func:`repro.sparse.optimize_partition`) pays per move only for
+what the move touched.
+
+See ``docs/api.md`` for the public API reference and DESIGN.md §1/§7/§8/§9
+for the architecture.
 """
 from .phase import CommPhase
 from .primitives import (active_senders_per_node, transport_times,
@@ -31,14 +37,16 @@ from .primitives import (active_senders_per_node, transport_times,
                          segmented_arange, grouped_queue_steps,
                          queue_traversal_steps,
                          batched_queue_traversal_steps)
-from .stack import PhaseStack, StackSimArrays
+from .stack import PhaseStack, StackSimArrays, STACK_BACKENDS
+from .delta import ARENA_TYPES, DeltaStack
 from .strategies import (STRATEGIES, StrategyPlan, StrategyVerdict,
                          standard, two_step, three_step, rewrite,
                          injected_payload, delivered_payload, best_strategy,
                          best_strategy_many)
 
 __all__ = [
-    "CommPhase", "PhaseStack", "StackSimArrays",
+    "CommPhase", "PhaseStack", "StackSimArrays", "STACK_BACKENDS",
+    "DeltaStack", "ARENA_TYPES",
     "active_senders_per_node", "transport_times", "per_proc_sums",
     "group_by_receiver", "sum_by_pairs", "segmented_arange",
     "grouped_queue_steps",

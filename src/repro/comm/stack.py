@@ -52,7 +52,12 @@ from .primitives import (flat_orders, group_by_receiver,
                          grouped_queue_steps, transport_times)
 from .primitives import active_senders_per_node
 
-__all__ = ["PhaseStack", "StackSimArrays", "as_stack"]
+__all__ = ["PhaseStack", "StackSimArrays", "as_stack", "STACK_BACKENDS"]
+
+#: Allowed values for the ``backend`` kwarg and the ``REPRO_STACK_BACKEND``
+#: env var.  Mirrors ``repro.kernels.comm_stack.BACKENDS`` — duplicated here
+#: so eager validation never has to import the (jax-adjacent) kernels module.
+STACK_BACKENDS = ("numpy", "jax", "pallas")
 
 
 def as_stack(phases) -> "PhaseStack | None":
@@ -237,9 +242,22 @@ class PhaseStack:
     # -- backend resolution --------------------------------------------------
     @staticmethod
     def _backend(backend):
-        """Resolve a backend name to ('numpy', None) or (name, kernels mod)."""
+        """Resolve a backend name to ('numpy', None) or (name, kernels mod).
+
+        Validation is eager and happens *here*, before any reduction runs:
+        an unknown name — whether passed as the ``backend`` kwarg or set in
+        the ``REPRO_STACK_BACKEND`` env var — raises a ``ValueError`` naming
+        the allowed values and where the bad name came from, instead of
+        failing deep inside a segmented pass.
+        """
+        source = "the backend argument"
         if backend is None:
             backend = os.environ.get("REPRO_STACK_BACKEND", "numpy")
+            source = "the REPRO_STACK_BACKEND environment variable"
+        if backend not in STACK_BACKENDS:
+            raise ValueError(
+                f"unknown stack backend {backend!r} (from {source}); "
+                f"allowed values: {STACK_BACKENDS}")
         if backend == "numpy":
             return "numpy", None
         from repro.kernels import comm_stack   # lazy: keeps comm numpy-only

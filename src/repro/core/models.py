@@ -22,6 +22,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.comm.delta import ARENA_TYPES as _ARENAS
 from repro.comm.primitives import active_senders_per_node, transport_times
 from repro.comm.stack import PhaseStack, as_stack
 
@@ -250,14 +251,17 @@ def phase_cost_many(phases, level: str = "contention",
     machine scan) in one call.
 
     Fast path: phases bound to one machine (or an already-built
-    :class:`repro.comm.PhaseStack`) are priced in one segmented pass via the
-    stacked arena — bit-identical to the per-phase loop, which remains the
-    fallback for single phases and mixed-machine sweeps.
+    :class:`repro.comm.PhaseStack` / :class:`repro.comm.DeltaStack`) are
+    priced in one segmented pass via the arena — bit-identical to the
+    per-phase loop, which remains the fallback for single phases and
+    mixed-machine sweeps.  A ``DeltaStack`` is priced from its incremental
+    caches (even for a single phase, which is the partition-optimizer case).
     """
     if level not in MODEL_LEVELS:
         raise ValueError(f"unknown model level {level!r}")
-    if not isinstance(phases, PhaseStack):
-        phases = list(phases)
+    if isinstance(phases, _ARENAS):
+        return _stack_costs(phases, level, params, backend=backend)
+    phases = list(phases)
     stack = as_stack(phases)
     if stack is None:
         return [phase_cost_phase(ph, level=level, params=params)
@@ -269,10 +273,13 @@ def model_ladder_many(phases, params: CommParams | None = None,
                       backend: str | None = None
                       ) -> list[dict[str, CostBreakdown]]:
     """Evaluate the full model ladder on a sweep of phases: the arena is
-    stacked once and swept once per ladder level."""
-    if not isinstance(phases, PhaseStack):
+    stacked once and swept once per ladder level (a :class:`PhaseStack` or
+    :class:`repro.comm.DeltaStack` passes straight through)."""
+    if isinstance(phases, _ARENAS):
+        stack = phases
+    else:
         phases = list(phases)
-    stack = as_stack(phases)
+        stack = as_stack(phases)
     if stack is None:
         return [{lvl: phase_cost_phase(ph, level=lvl, params=params)
                  for lvl in MODEL_LEVELS} for ph in phases]

@@ -15,7 +15,9 @@ module provides accelerator implementations of exactly those two:
     the MXU (``values @ one_hot`` for sums, a masked row-max for maxima),
     accumulating across chunks in the resident output block — the
     flash-attention accumulate idiom.  O(messages x segments) work: it is
-    the MXU-shaped demonstration/parity backend, not the scalable one.
+    the MXU-shaped demonstration/parity backend, not the scalable one, so
+    requests whose padded one-hot work exceeds ``PALLAS_ONE_HOT_LIMIT``
+    reroute to the jitted jax path (:func:`pallas_within_limit`).
 
 numpy is the default everywhere and the silent fallback when jax is absent
 (:func:`resolve_backend` warns once).  Backend parity is *allclose*, not
@@ -35,6 +37,26 @@ BACKENDS = ("numpy", "jax", "pallas")
 
 _CHUNK = 512        # messages per grid step
 _SEG_BLOCK = 128    # segments per output block (one lane tile)
+
+#: Ceiling on the Pallas kernel's total one-hot work, in (padded message,
+#: padded segment) cells.  The kernel is O(messages x segments) — every grid
+#: step materializes a (_CHUNK, _SEG_BLOCK) membership matrix, and interpret
+#: mode (CPU) buffers far more than that — so a large sweep arena would both
+#: crawl and blow up memory.  Above this limit the request silently reroutes
+#: to the scalable jitted ``segment_sum``/``segment_max`` path (O(messages)
+#: scatter-add); numpy fallback behaviour is unchanged.
+PALLAS_ONE_HOT_LIMIT = 1 << 24
+
+
+def pallas_within_limit(n_values: int, n_seg: int) -> bool:
+    """Would the Pallas one-hot kernel stay under ``PALLAS_ONE_HOT_LIMIT``?
+
+    Uses the *padded* extents (chunk/segment-block multiples), i.e. exactly
+    the cell count the kernel would sweep.
+    """
+    n_pad = max(_CHUNK, -(-n_values // _CHUNK) * _CHUNK)
+    s_pad = max(_SEG_BLOCK, -(-n_seg // _SEG_BLOCK) * _SEG_BLOCK)
+    return n_pad * s_pad <= PALLAS_ONE_HOT_LIMIT
 
 
 def have_jax() -> bool:
@@ -150,7 +172,7 @@ def segment_sum(values, seg_ids, n_seg: int, backend: str = "numpy") -> np.ndarr
     seg_ids = np.asarray(seg_ids, dtype=np.int64)
     if backend == "numpy":
         return np.bincount(seg_ids, weights=values, minlength=n_seg)
-    if backend == "pallas":
+    if backend == "pallas" and pallas_within_limit(values.size, n_seg):
         return _pallas_reduce(values, seg_ids, n_seg, "sum")
     import jax.numpy as jnp
     seg_sum, _ = _jax_segment_ops()
@@ -167,7 +189,7 @@ def segment_max(values, seg_ids, n_seg: int, backend: str = "numpy") -> np.ndarr
         out = np.zeros(n_seg)
         np.maximum.at(out, seg_ids, values)
         return out
-    if backend == "pallas":
+    if backend == "pallas" and pallas_within_limit(values.size, n_seg):
         return _pallas_reduce(values, seg_ids, n_seg, "max")
     import jax.numpy as jnp
     _, seg_max = _jax_segment_ops()

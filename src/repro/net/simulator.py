@@ -28,6 +28,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.comm import ARENA_TYPES as _ARENAS
 from repro.comm import CommPhase, PhaseStack
 from repro.comm.stack import as_stack
 from repro.comm.primitives import (per_proc_sums, queue_traversal_steps,
@@ -187,15 +188,19 @@ def simulate_many(phases,
     sweep is reproducible — pass your own generator to chain sweeps).
 
     Fast path: phases bound to one machine (or an already-built
-    :class:`repro.comm.PhaseStack`) are simulated in one segmented pass over
-    the stacked arena, bit-identical to the per-phase loop; single phases
-    and mixed-machine sweeps fall back to :func:`simulate`.
+    :class:`repro.comm.PhaseStack` / :class:`repro.comm.DeltaStack`) are
+    simulated in one segmented pass over the arena, bit-identical to the
+    per-phase loop; single phases and mixed-machine sweeps fall back to
+    :func:`simulate`.  A ``DeltaStack`` serves transport and contention from
+    its incrementally-maintained caches.
     """
     if noise > 0.0 and rng is None:
         rng = np.random.default_rng(0)
-    if not isinstance(phases, PhaseStack):
+    if isinstance(phases, _ARENAS):
+        stack = phases
+    else:
         phases = list(phases)
-    stack = as_stack(phases)
+        stack = as_stack(phases)
     if stack is not None:
         out = _simulate_stack(stack, recv_post_orders, arrival_orders)
         if noise > 0.0:

@@ -4,13 +4,16 @@ the paper validates its models on (SpMV / SpGEMM across hierarchy levels)."""
 from .csr import CSR, eye, diag
 from .problems import poisson_3d, elasticity_like_3d
 from .partition import (RowPartition, CommPattern, spmv_comm_pattern,
-                        spgemm_comm_pattern, stack_patterns)
+                        spgemm_comm_pattern, stack_patterns,
+                        SpmvPatternState, spmv_comm_pattern_delta)
 from .amg import build_hierarchy, vcycle, AMGLevel
+from .optimize import Move, OptimizeResult, optimize_partition
 
 __all__ = [
     "CSR", "eye", "diag",
     "poisson_3d", "elasticity_like_3d",
     "RowPartition", "CommPattern", "spmv_comm_pattern", "spgemm_comm_pattern",
-    "stack_patterns",
+    "stack_patterns", "SpmvPatternState", "spmv_comm_pattern_delta",
     "build_hierarchy", "vcycle", "AMGLevel",
+    "Move", "OptimizeResult", "optimize_partition",
 ]

@@ -1,0 +1,455 @@
+"""DeltaStack bit-identity + the incremental partition/search machinery.
+
+The acceptance contract of the delta engine is the same as the stack's, one
+level up: for ANY sequence of ``apply`` mutations, every ladder level and
+every simulator output served from the delta caches must equal a freshly
+built :class:`~repro.comm.PhaseStack` over the mutated phases — bit for bit,
+including the edge cases a local search actually produces (empty deltas,
+receivers drained to zero, receivers that never existed before).  The sparse
+half pins that :func:`spmv_comm_pattern_delta` re-derives exactly the fresh
+:func:`spmv_comm_pattern` message set, and that the optimizer's incremental
+pricer never diverges from rebuild-per-candidate.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.comm import CommPhase, DeltaStack, PhaseStack
+from repro.comm.delta import _MaxTree
+from repro.core import (MODEL_LEVELS, model_ladder_many, phase_cost_many,
+                        phase_cost_phase)
+from repro.net import (blue_waters_machine, tpu_v5e_machine, simulate,
+                       simulate_many)
+from repro.sparse import (RowPartition, SpmvPatternState, optimize_partition,
+                          poisson_3d, spmv_comm_pattern,
+                          spmv_comm_pattern_delta)
+
+BW = blue_waters_machine((2, 2, 2))
+TPU = tpu_v5e_machine((4, 4))
+
+
+def _random_phase(machine, n, seed, n_procs=None):
+    rng = np.random.default_rng(seed)
+    P = n_procs or machine.n_procs
+    if n == 0:
+        return CommPhase.build(machine, [], [], [], n_procs=P)
+    src = rng.integers(0, P, n)
+    dst = (src + rng.integers(1, P, n)) % P
+    size = rng.integers(8, 1 << 18, n).astype(float)
+    return CommPhase.build(machine, src, dst, size, n_procs=P)
+
+
+def _sweep(machine, seed=0):
+    return [_random_phase(machine, n, seed + i)
+            for i, n in enumerate((0, 1, 40, 300, 2))]
+
+
+def _random_delta(delta, rng, max_rm=25, max_add=12):
+    """A random mutation touching a random subset of phases."""
+    total = delta.total_msgs
+    n_rm = int(rng.integers(0, min(max_rm, total) + 1))
+    rm = rng.choice(total, size=n_rm, replace=False) if n_rm else None
+    add = {}
+    for pi in range(delta.n_phases):
+        if rng.random() < 0.5:
+            continue
+        k = int(rng.integers(0, max_add))
+        if k == 0:
+            continue
+        P = delta.phases[pi].n_procs
+        src = rng.integers(0, P, k)
+        add[pi] = (src, (src + rng.integers(1, P, k)) % P,
+                   rng.integers(8, 1 << 18, k).astype(float))
+    return rm, add
+
+
+def _assert_matches_fresh(delta):
+    """The full contract: ladder + simulator vs a rebuilt-from-raw stack."""
+    rebuilt = [CommPhase.build(ph.machine, ph.src, ph.dst, ph.size,
+                               n_procs=ph.n_procs) for ph in delta.phases]
+    stack = PhaseStack.build(rebuilt)
+    for lvl in MODEL_LEVELS:
+        assert phase_cost_many(delta, level=lvl) == \
+            phase_cost_many(stack, level=lvl)
+    got, want = simulate_many(delta), simulate_many(stack)
+    for g, w in zip(got, want):
+        assert g.time == w.time
+        assert g.transport == w.transport
+        assert g.queue == w.queue
+        assert g.contention == w.contention
+        assert g.max_link_bytes == w.max_link_bytes
+        assert g.total_net_bytes == w.total_net_bytes
+        assert np.array_equal(g.per_proc_transport, w.per_proc_transport)
+        assert np.array_equal(g.per_proc_queue_steps, w.per_proc_queue_steps)
+
+
+# ------------------------------------------------------ construction --------
+def test_from_phases_accepts_phases_and_stack():
+    phases = _sweep(BW)
+    a = DeltaStack.from_phases(phases)
+    b = DeltaStack.from_phases(PhaseStack.build(phases))
+    assert a.n_phases == b.n_phases == len(phases)
+    assert phase_cost_many(a) == phase_cost_many(b)
+
+
+def test_from_phases_rejects_mixed_machines_and_unbound():
+    with pytest.raises(ValueError, match="mixed machines"):
+        DeltaStack.from_phases([_random_phase(BW, 10, 0),
+                                _random_phase(TPU, 10, 0)])
+    from repro.sparse import CommPattern
+    cp = CommPattern(np.array([0]), np.array([1]), np.array([8.0]), 2)
+    with pytest.raises(TypeError, match="bound CommPhase"):
+        DeltaStack.from_phases([cp])
+
+
+def test_generation_zero_matches_fresh():
+    delta = DeltaStack.from_phases(_sweep(BW))
+    _assert_matches_fresh(delta)
+    delta.check()
+
+
+def test_empty_stack():
+    delta = DeltaStack.from_phases([])
+    assert delta.n_phases == 0 and delta.total_msgs == 0
+    assert phase_cost_many(delta) == []
+    assert simulate_many(delta) == []
+    d2 = delta.apply()
+    assert d2.n_phases == 0
+
+
+# ------------------------------------------------------ mutation ------------
+def test_empty_delta_is_identity():
+    delta = DeltaStack.from_phases(_sweep(BW, seed=3))
+    for d2 in (delta.apply(), delta.apply([], {}), delta.apply(None, None)):
+        assert phase_cost_many(d2) == phase_cost_many(delta)
+        d2.check()
+
+
+@pytest.mark.parametrize("machine", [BW, TPU], ids=lambda m: m.name)
+def test_random_move_sequences_bit_identical(machine):
+    delta = DeltaStack.from_phases(_sweep(machine, seed=11))
+    rng = np.random.default_rng(5)
+    for step in range(6):
+        delta = delta.apply(*_random_delta(delta, rng))
+        if step % 2:          # materialize the lazy routing path mid-chain
+            simulate_many(delta)
+        _assert_matches_fresh(delta)
+
+
+def test_remove_all_from_one_receiver():
+    ph = _random_phase(BW, 200, 17)
+    delta = DeltaStack.from_phases([ph, _random_phase(BW, 50, 18)])
+    receiver = int(np.bincount(ph.dst).argmax())
+    rm = np.nonzero(ph.dst == receiver)[0]       # phase 0: arena idx == local
+    assert rm.size > 0
+    delta = delta.apply(rm)
+    assert not (delta.phases[0].dst == receiver).any()
+    _assert_matches_fresh(delta)
+
+
+def test_remove_entire_phase_then_refill():
+    delta = DeltaStack.from_phases(_sweep(BW, seed=23))
+    off = delta.offsets
+    rm = np.arange(off[3], off[4])                # drain phase 3 completely
+    delta = delta.apply(rm)
+    assert delta.phases[3].n_msgs == 0
+    _assert_matches_fresh(delta)
+    delta = delta.apply(None, {3: ([0, 1, 2], [9, 9, 9],
+                                   [64.0, 4096.0, 1 << 16])})
+    assert delta.phases[3].n_msgs == 3
+    _assert_matches_fresh(delta)
+
+
+def test_new_receiver_appears():
+    """Messages to a process that received nothing before the delta."""
+    P = BW.n_procs
+    rng = np.random.default_rng(29)
+    src = rng.integers(0, P // 2, 80)
+    dst = rng.integers(0, P // 2, 80)             # upper half silent
+    keep = src != dst
+    ph = CommPhase.build(BW, src[keep], dst[keep],
+                         rng.integers(8, 1 << 16, int(keep.sum()))
+                         .astype(float), n_procs=P)
+    delta = DeltaStack.from_phases([ph])
+    newcomer = P - 1
+    assert not (ph.dst == newcomer).any()
+    delta = delta.apply(None, {0: ([0, 3], [newcomer, newcomer],
+                                   [1 << 14, 1 << 10])})
+    assert (delta.phases[0].dst == newcomer).sum() == 2
+    _assert_matches_fresh(delta)
+
+
+def test_verify_mode_checks_every_apply():
+    delta = DeltaStack.from_phases(_sweep(BW, seed=31), verify=True)
+    rng = np.random.default_rng(7)
+    for _ in range(3):
+        delta = delta.apply(*_random_delta(delta, rng))   # check() inside
+    assert delta.verify
+
+
+# ------------------------------------------------------ validation ----------
+def test_apply_validates_inputs():
+    delta = DeltaStack.from_phases(_sweep(BW, seed=37))
+    with pytest.raises(ValueError, match="duplicate"):
+        delta.apply([1, 1])
+    with pytest.raises(ValueError, match="out of range"):
+        delta.apply([delta.total_msgs])
+    with pytest.raises(ValueError, match="out of range"):
+        delta.apply([-1])
+    with pytest.raises(ValueError, match="phase index"):
+        delta.apply(None, {99: ([0], [1], [8.0])})
+    P = delta.phases[2].n_procs
+    with pytest.raises(ValueError, match="endpoints"):
+        delta.apply(None, {2: ([0], [P], [8.0])})
+    with pytest.raises(ValueError, match="match in length"):
+        delta.apply(None, {2: ([0, 1], [2], [8.0])})
+
+
+# ------------------------------------------------------ consumers -----------
+def test_model_ladder_many_on_delta():
+    delta = DeltaStack.from_phases(_sweep(BW, seed=41))
+    delta = delta.apply(*_random_delta(delta, np.random.default_rng(2)))
+    want = [{lvl: phase_cost_phase(ph, level=lvl) for lvl in MODEL_LEVELS}
+            for ph in delta.phases]
+    assert model_ladder_many(delta) == want
+
+
+def test_single_phase_delta_matches_loop():
+    """The optimizer case: a one-phase arena still rides the delta caches."""
+    delta = DeltaStack.from_phases([_random_phase(BW, 300, 43)])
+    delta = delta.apply([0, 5, 7], {0: ([1], [2], [4096.0])})
+    assert phase_cost_many(delta) == [phase_cost_phase(delta.phases[0])]
+
+
+def test_params_override_falls_back_correctly():
+    delta = DeltaStack.from_phases(_sweep(BW, seed=47))
+    delta = delta.apply(*_random_delta(delta, np.random.default_rng(3)))
+    override = BW.params.replace(network_locality=1)
+    got = phase_cost_many(delta, params=override)
+    want = [phase_cost_phase(ph, params=override) for ph in delta.phases]
+    assert got == want
+
+
+def test_custom_orders_on_mutated_arena():
+    delta = DeltaStack.from_phases(_sweep(BW, seed=53))
+    delta = delta.apply(*_random_delta(delta, np.random.default_rng(4)))
+    rng = np.random.default_rng(0)
+    arrivals = [ph.random_arrival_order(rng) for ph in delta.phases]
+    got = simulate_many(delta, arrival_orders=arrivals)
+    want = [simulate(ph, arrival_order=ao)
+            for ph, ao in zip(delta.phases, arrivals)]
+    for g, w in zip(got, want):
+        assert g.time == w.time
+        assert np.array_equal(g.per_proc_queue_steps, w.per_proc_queue_steps)
+
+
+def test_noise_stream_matches_loop():
+    delta = DeltaStack.from_phases(
+        [_random_phase(BW, n, 59 + n) for n in (50, 0, 80)])
+    got = simulate_many(delta, rng=np.random.default_rng(5), noise=0.1)
+    rng = np.random.default_rng(5)
+    want = [simulate(ph, rng=rng, noise=0.1) for ph in delta.phases]
+    assert [r.time for r in got] == [r.time for r in want]
+
+
+def test_unknown_backend_raises_eagerly():
+    delta = DeltaStack.from_phases(_sweep(BW, seed=61))
+    with pytest.raises(ValueError, match="unknown stack backend"):
+        delta.cost_arrays(backend="cuda")
+    with pytest.raises(ValueError, match="unknown stack backend"):
+        delta.sim_arrays(backend="tpu")
+
+
+# ------------------------------------------------------ property test -------
+@given(st.integers(0, 10**6))
+@settings(max_examples=10, deadline=None)
+def test_property_random_mutation_chain(seed):
+    rng = np.random.default_rng(seed)
+    delta = DeltaStack.from_phases(
+        [_random_phase(BW, int(rng.integers(0, 150)),
+                       int(rng.integers(1 << 30))) for _ in range(3)])
+    for _ in range(3):
+        delta = delta.apply(*_random_delta(delta, rng))
+    _assert_matches_fresh(delta)
+
+
+# ------------------------------------------------------ _MaxTree ------------
+def test_max_tree_point_and_batch_updates():
+    rng = np.random.default_rng(67)
+    values = rng.integers(0, 100, 37)
+    tree = _MaxTree(values)
+    assert tree.max() == values.max()
+    for _ in range(50):
+        i = int(rng.integers(0, values.size))
+        values[i] = int(rng.integers(0, 100))
+        tree.update(i, values[i])
+        assert tree.max() == values.max()
+    batch = rng.integers(0, values.size, 9)
+    values[batch] = 0
+    tree.update_many(np.unique(batch), values[np.unique(batch)])
+    assert tree.max() == values.max()
+    empty = _MaxTree(np.zeros(0, dtype=np.int64))
+    assert empty.max() == 0
+
+
+# ============================================== incremental SpMV pattern ====
+def _canon(src, dst, size):
+    order = np.lexsort((dst, src))
+    return src[order], dst[order], size[order]
+
+
+def test_spmv_state_build_matches_fresh_pattern():
+    A = poisson_3d(8)
+    part = RowPartition.balanced(A.n_rows, 16)
+    state = SpmvPatternState.build(A, part)
+    ref = spmv_comm_pattern(A, part)
+    assert np.array_equal(state.src, ref.src)
+    assert np.array_equal(state.dst, ref.dst)
+    assert np.array_equal(state.size, ref.size)
+
+
+def test_spmv_delta_matches_fresh_over_random_walk():
+    A = poisson_3d(9)
+    P = 24
+    state = SpmvPatternState.build(A, RowPartition.balanced(A.n_rows, P))
+    rng = np.random.default_rng(0)
+    starts = state.starts.copy()
+    walked = 0
+    for _ in range(40):
+        b = int(rng.integers(1, P))
+        d = int(rng.choice((-5, 5)))
+        ns = starts.copy()
+        ns[b] += d
+        if not starts[b - 1] < ns[b] < starts[b + 1]:
+            continue
+        rm, add, state2 = spmv_comm_pattern_delta(state, ns)
+        fresh = spmv_comm_pattern(A, RowPartition(ns))
+        got = _canon(state2.src, state2.dst, state2.size)
+        want = _canon(fresh.src, fresh.dst, fresh.size)
+        assert all(np.array_equal(g, w) for g, w in zip(got, want))
+        # survivors really survive: removed indices name every message that
+        # touches the two adjacent processes, nothing else
+        cm = np.zeros(P, dtype=bool)
+        cm[[b - 1, b]] = True
+        assert np.array_equal(rm, np.nonzero(cm[state.src]
+                                             | cm[state.dst])[0])
+        if walked % 2 == 0:        # alternate accept/reject to walk the
+            state, starts = state2, ns     # lazy-splice chain forward
+        walked += 1
+    assert walked > 10
+
+
+def test_spmv_delta_feeds_delta_stack():
+    """The (removed, added) delta drives DeltaStack.apply bit-identically."""
+    A = poisson_3d(8)
+    P = 16
+    machine = BW
+    state = SpmvPatternState.build(A, RowPartition.balanced(A.n_rows, P))
+    delta = DeltaStack.from_phases([state.pattern.bind(machine)])
+    rng = np.random.default_rng(1)
+    starts = state.starts.copy()
+    for _ in range(10):
+        b = int(rng.integers(1, P))
+        d = int(rng.choice((-4, 4)))
+        ns = starts.copy()
+        ns[b] += d
+        if not starts[b - 1] < ns[b] < starts[b + 1]:
+            continue
+        rm, add, state = spmv_comm_pattern_delta(state, ns)
+        delta = delta.apply(rm, {0: add})
+        starts = ns
+        _assert_matches_fresh(delta)
+        # the delta arena mirrors the state's message order exactly
+        assert np.array_equal(delta.phases[0].src, state.src)
+        assert np.array_equal(delta.phases[0].dst, state.dst)
+        assert np.array_equal(delta.phases[0].size, state.size)
+
+
+def test_spmv_delta_validates_new_starts():
+    A = poisson_3d(6)
+    state = SpmvPatternState.build(A, RowPartition.balanced(A.n_rows, 8))
+    with pytest.raises(ValueError, match="process count"):
+        spmv_comm_pattern_delta(state, state.starts[:-1])
+    bad = state.starts.copy()
+    bad[-1] += 1
+    with pytest.raises(ValueError, match="partition"):
+        spmv_comm_pattern_delta(state, bad)
+    bad = state.starts.copy()
+    bad[1], bad[2] = bad[2] + 5, bad[1]
+    with pytest.raises(ValueError, match="partition"):
+        spmv_comm_pattern_delta(state, bad)
+
+
+def test_spmv_delta_noop_returns_same_state():
+    A = poisson_3d(6)
+    state = SpmvPatternState.build(A, RowPartition.balanced(A.n_rows, 8))
+    rm, add, state2 = spmv_comm_pattern_delta(state, state.starts)
+    assert rm.size == 0 and add[0].size == 0
+    assert state2 is state
+
+
+# ============================================== the partition optimizer =====
+def test_optimize_partition_improves_or_holds():
+    A = poisson_3d(8)
+    res = optimize_partition(A, BW, n_procs=16, moves=24, seed=0)
+    assert res.cost <= res.initial_cost
+    assert len(res.moves) == 24
+    assert res.n_accepted == sum(m.accepted for m in res.moves)
+    # the returned pattern really is the final partition's pattern
+    fresh = spmv_comm_pattern(A, res.partition)
+    got = _canon(res.pattern.src, res.pattern.dst, res.pattern.size)
+    want = _canon(fresh.src, fresh.dst, fresh.size)
+    assert all(np.array_equal(g, w) for g, w in zip(got, want))
+
+
+def test_optimize_partition_delta_pricing_matches_rebuild():
+    """Every candidate the delta pricer recorded re-prices to the same cost
+    under full reconstruction.  Replaying the recorded candidate partitions
+    (rather than racing two independent searches) pins both sides to
+    identical candidates, so an ulp-level cost tie cannot fork the accept
+    decisions and flake the comparison."""
+    A = poisson_3d(8)
+    res = optimize_partition(A, BW, n_procs=16, moves=24, seed=3)
+    priced = 0
+    for mv in res.moves:
+        if np.isnan(mv.cost):
+            continue
+        phase = spmv_comm_pattern(A, RowPartition(mv.starts)).bind(BW)
+        assert mv.cost == pytest.approx(phase_cost_phase(phase).total,
+                                        rel=1e-9)
+        priced += 1
+    assert priced > 5
+
+
+def test_optimize_partition_rebuild_pricer_smoke():
+    """The reference pricer runs the same search loop end to end."""
+    res = optimize_partition(poisson_3d(7), BW, n_procs=12, moves=12,
+                             seed=0, pricer="rebuild")
+    assert res.cost <= res.initial_cost
+    assert len(res.moves) == 12
+
+
+def test_optimize_partition_verify_mode():
+    res = optimize_partition(poisson_3d(6), BW, n_procs=8, moves=8, seed=0,
+                             verify=True)
+    assert res.cost <= res.initial_cost
+
+
+def test_optimize_partition_rerun_strategies():
+    res = optimize_partition(poisson_3d(7), BW, n_procs=12, moves=12, seed=1,
+                             rerun_strategies=True)
+    assert len(res.verdicts) == res.n_accepted
+    for it, verdict in res.verdicts:
+        assert res.moves[it].accepted
+        assert verdict.model_winner in verdict.model
+
+
+def test_optimize_partition_validates():
+    A = poisson_3d(6)
+    with pytest.raises(ValueError, match="n_procs or an explicit part"):
+        optimize_partition(A, BW)
+    with pytest.raises(ValueError, match="unknown model level"):
+        optimize_partition(A, BW, n_procs=8, level="psychic")
+    with pytest.raises(ValueError, match="unknown pricer"):
+        optimize_partition(A, BW, n_procs=8, pricer="magic")

@@ -1,0 +1,144 @@
+"""Round-trip coverage for the parameter-recovery layer (core/fitting.py).
+
+The paper's calibration story is a round trip: ping-pong style measurements
+on a few nodes -> fitted (alpha, R_b, R_N, gamma, delta) -> model applied at
+scale.  These tests close the loop against the simulator's ground-truth
+tables: noiseless synthetic sweeps from :mod:`repro.net.pingpong` must give
+fits that recover the known :class:`~repro.core.CommParams` entries within
+tight tolerances (the only systematic offset being the simulator's one
+queue-step gamma per ping, which is orders of magnitude below every alpha).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (PROTOCOL_NAMES, fit_alpha_beta, fit_delta, fit_gamma,
+                        fit_node_aware_table, fit_RN)
+from repro.net import (blue_waters_machine, contention_line_test,
+                       high_volume_pingpong, pingpong_sweep, ppn_sweep)
+
+BW = blue_waters_machine((2, 2, 2))
+
+#: >= 2 sizes per protocol bucket (short <= 512 < eager <= 8192 < rend)
+SIZES = np.array([64.0, 256.0, 1024.0, 4096.0, 16384.0, 65536.0, 262144.0])
+
+LOCALITY_KINDS = ("intra_socket", "intra_node", "inter_node")
+
+
+def _loc_index(kind: str) -> int:
+    return BW.params.locality_names.index(kind)
+
+
+# ------------------------------------------------ alpha / R_b ---------------
+@pytest.mark.parametrize("kind", LOCALITY_KINDS)
+def test_fit_alpha_beta_recovers_table_row(kind):
+    times = pingpong_sweep(BW, kind, SIZES, reps=1, noise=0.0)
+    fits = fit_alpha_beta(SIZES, times, BW.params)
+    li = _loc_index(kind)
+    for pi, name in enumerate(PROTOCOL_NAMES):
+        alpha_true = BW.params.alpha[li, pi]
+        Rb_true = BW.params.Rb[li, pi]
+        alpha_fit, Rb_fit = fits[name]
+        # the simulated ping pays one queue step (gamma) on top of alpha
+        assert alpha_fit == pytest.approx(alpha_true + BW.params.gamma,
+                                          rel=1e-6)
+        assert Rb_fit == pytest.approx(Rb_true, rel=1e-6)
+
+
+def test_fit_node_aware_table_round_trip():
+    sweeps = {kind: (SIZES, pingpong_sweep(BW, kind, SIZES, reps=1,
+                                           noise=0.0))
+              for kind in LOCALITY_KINDS}
+    table = fit_node_aware_table(sweeps, BW.params)
+    for kind in LOCALITY_KINDS:
+        li = _loc_index(kind)
+        for pi, name in enumerate(PROTOCOL_NAMES):
+            alpha_fit, Rb_fit = table[kind][name]
+            assert alpha_fit == pytest.approx(
+                BW.params.alpha[li, pi] + BW.params.gamma, rel=1e-6)
+            assert Rb_fit == pytest.approx(BW.params.Rb[li, pi], rel=1e-6)
+
+
+def test_fit_alpha_beta_skips_underpopulated_buckets():
+    sizes = np.array([64.0, 128.0])                 # short-protocol only
+    times = pingpong_sweep(BW, "inter_node", sizes, reps=1, noise=0.0)
+    fits = fit_alpha_beta(sizes, times, BW.params)
+    assert set(fits) == {"short"}
+
+
+def test_fit_alpha_beta_tolerates_noise():
+    rngs = pingpong_sweep(BW, "inter_node", SIZES, reps=8, noise=0.02,
+                          seed=1)
+    fits = fit_alpha_beta(SIZES, rngs, BW.params)
+    li = _loc_index("inter_node")
+    for pi, name in enumerate(PROTOCOL_NAMES):
+        _, Rb_fit = fits[name]
+        assert Rb_fit == pytest.approx(BW.params.Rb[li, pi], rel=0.25)
+
+
+# ------------------------------------------------ R_N -----------------------
+def test_fit_RN_recovers_injection_cap():
+    size = float(1 << 20)                           # rendezvous regime
+    ks, ts = ppn_sweep(BW, size, noise=0.0)
+    li = _loc_index("inter_node")
+    pi = PROTOCOL_NAMES.index("rend")
+    RN = fit_RN(ks, ts, size, BW.params.alpha[li, pi], BW.params.Rb[li, pi])
+    # saturated slope is size/R_N exactly: T(k) = alpha + gamma + k*size/R_N
+    assert RN == pytest.approx(BW.params.RN[li, pi], rel=1e-6)
+
+
+def test_fit_RN_unsaturated_reports_inf():
+    ks = np.arange(1.0, 9.0)
+    times = 3e-6 - 1e-8 * ks          # non-positive slope: no saturation seen
+    assert fit_RN(ks, times, 4096.0, 3e-6, 2.9e9) == float("inf")
+
+
+# ------------------------------------------------ gamma ---------------------
+def test_fit_gamma_exact_synthetic():
+    n = np.array([8.0, 16.0, 32.0, 64.0])
+    base = 1e-4 + 3e-6 * n
+    gamma_true = 8.4e-9
+    assert fit_gamma(n, base + gamma_true * n * n, base) == \
+        pytest.approx(gamma_true, rel=1e-12)
+
+
+def test_fit_gamma_from_reversed_high_volume_pingpong():
+    """Reversed-order HVPP residuals: the simulator's exact queue walk costs
+    gamma * n(n+1)/2, so fitting the paper's gamma * n^2 upper-bound form
+    recovers ~gamma/2 — the over-bounding the paper itself reports."""
+    ns = (8, 16, 32, 64)
+    resid, n2 = [], []
+    for n in ns:
+        _, r1, _ = high_volume_pingpong(BW, [(0, 32)], n, 4096.0,
+                                        order="reversed", noise=0.0)
+        resid.append(r1.time)
+        n2.append(n)
+    measured = np.asarray(resid)
+    modeled_no_queue = measured - np.asarray(
+        [high_volume_pingpong(BW, [(0, 32)], n, 4096.0, order="reversed",
+                              noise=0.0)[1].queue for n in ns])
+    gamma_fit = fit_gamma(np.asarray(n2, dtype=float), measured,
+                          modeled_no_queue)
+    gamma_true = BW.params.gamma
+    assert 0.4 * gamma_true < gamma_fit < 0.65 * gamma_true
+
+
+# ------------------------------------------------ delta ---------------------
+def test_fit_delta_recovers_contention_penalty():
+    machine = blue_waters_machine((4, 1, 1))        # the Gemini line (Fig. 6)
+    ells, measured, modeled_no_cont = [], [], []
+    for size in (1 << 14, 1 << 16, 1 << 18):
+        _, r1, _ = contention_line_test(machine, n=4, size=float(size),
+                                        noise=0.0)
+        assert r1.max_link_bytes > 0                # the G1-G2 link funnels
+        ells.append(r1.max_link_bytes)
+        measured.append(r1.time)
+        modeled_no_cont.append(r1.time - r1.contention)
+    delta_fit = fit_delta(np.asarray(ells), np.asarray(measured),
+                          np.asarray(modeled_no_cont))
+    assert delta_fit == pytest.approx(machine.params.delta, rel=1e-9)
+
+
+def test_fit_gamma_delta_zero_denominator():
+    z = np.zeros(3)
+    assert fit_gamma(z, z, z) == 0.0
+    assert fit_delta(z, z, z) == 0.0

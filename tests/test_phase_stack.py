@@ -315,6 +315,74 @@ def test_unknown_backend_raises():
         stack.cost_arrays(backend="cuda")
 
 
+def test_backend_error_is_eager_and_lists_allowed_values():
+    """Validation happens before any reduction and names every legal value
+    plus where the bad name came from (kwarg vs env var)."""
+    stack = PhaseStack.build(_sweep(BW, seed=33))
+    with pytest.raises(ValueError, match=r"numpy.*jax.*pallas"):
+        stack.cost_arrays(backend="rocm")
+    with pytest.raises(ValueError, match="backend argument"):
+        stack.sim_arrays(backend="rocm")
+    with pytest.raises(ValueError, match="unknown stack backend"):
+        phase_cost_many(stack, backend="rocm")
+    with pytest.raises(ValueError, match="unknown stack backend"):
+        stack.link_contention_many(backend="rocm")
+
+
+def test_env_backend_validated_eagerly(monkeypatch):
+    monkeypatch.setenv("REPRO_STACK_BACKEND", "cuda")
+    stack = PhaseStack.build(_sweep(BW, seed=35))
+    with pytest.raises(ValueError, match="REPRO_STACK_BACKEND"):
+        stack.cost_arrays()
+    with pytest.raises(ValueError, match="REPRO_STACK_BACKEND"):
+        simulate_many(stack)
+
+
+# ------------------------------------------------- pallas size guard --------
+from repro.kernels import comm_stack as _cs  # numpy-safe import
+
+
+def test_stack_backends_mirror_kernels():
+    """The eagerly-validated tuple (kept kernels-import-free in stack.py)
+    must never drift from the kernels module's own backend list."""
+    from repro.comm import STACK_BACKENDS
+    assert STACK_BACKENDS == _cs.BACKENDS
+
+
+def test_pallas_one_hot_limit_uses_padded_extents():
+    n_at_limit = _cs.PALLAS_ONE_HOT_LIMIT // _cs._SEG_BLOCK
+    assert _cs.pallas_within_limit(n_at_limit, _cs._SEG_BLOCK)
+    assert not _cs.pallas_within_limit(n_at_limit + 1, _cs._SEG_BLOCK)
+    assert not _cs.pallas_within_limit(
+        _cs._CHUNK, _cs.PALLAS_ONE_HOT_LIMIT // _cs._CHUNK + 1)
+    # tiny inputs still pad up to one (chunk, segment-block) tile
+    assert _cs.pallas_within_limit(1, 1)
+
+
+@needs_jax
+@pytest.mark.parametrize("op", ["sum", "max"])
+def test_pallas_oversize_falls_back_to_jax(monkeypatch, op):
+    """Above the one-hot work limit the pallas request must reroute to the
+    scalable jax segment path — the kernel itself must never launch."""
+    fn = _cs.segment_sum if op == "sum" else _cs.segment_max
+    rng = np.random.default_rng(0)
+    vals = rng.random(2000)
+    ids = rng.integers(0, 300, 2000)
+    want = fn(vals, ids, 300, backend="numpy")
+
+    def banned(*a, **k):
+        raise AssertionError("pallas kernel must not run above the limit")
+
+    monkeypatch.setattr(_cs, "_pallas_reduce", banned)
+    monkeypatch.setattr(_cs, "PALLAS_ONE_HOT_LIMIT", 1024)
+    got = fn(vals, ids, 300, backend="pallas")      # rerouted to jax
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+    # below the limit the kernel IS selected (the ban trips)
+    monkeypatch.setattr(_cs, "PALLAS_ONE_HOT_LIMIT", 1 << 40)
+    with pytest.raises(AssertionError, match="must not run"):
+        fn(vals, ids, 300, backend="pallas")
+
+
 @needs_jax
 def test_env_backend_cannot_poison_numpy_caches(monkeypatch):
     """REPRO_STACK_BACKEND must not leak float32 accelerator results into
