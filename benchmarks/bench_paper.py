@@ -308,6 +308,60 @@ def bench_strategy_rewrite_throughput():
     return rows
 
 
+def bench_hetero_gpu_strategies():
+    """Heterogeneous nodes (Lockhart et al. 2022): host-staged vs GPU-direct.
+
+    Rows:
+      * the message count at which the Lassen-like preset's simulator verdict
+        flips from ``device_direct`` to ``host_staged`` (the crossover);
+      * how often the model ladder predicts the simulator's winner across
+        the whole sweep on both hetero presets;
+      * the simulated speedups at the sweep's endpoints (direct over staged
+        at the small end, staged over direct at the large end);
+      * whether the Frontier-like preset (NICs on the GPUs) ever leaves the
+        direct path (it should not: derived value 1.0 = always direct).
+    """
+    from repro.comm import CommPhase, GPU_STRATEGIES, best_strategy_many
+    from repro.net import frontier_machine, lassen_machine
+
+    counts = (8, 32, 128, 512, 2048)
+
+    def phases_for(machine):
+        out = []
+        for n in counts:
+            rng = np.random.default_rng(42)
+            P = machine.n_procs
+            src = rng.integers(0, P, n)
+            dst = (src + rng.integers(1, P, n)) % P
+            size = rng.integers(256, 8192, n).astype(float)
+            out.append(CommPhase.build(machine, src, dst, size, n_procs=P))
+        return out
+
+    def run():
+        lm, fm = lassen_machine((2, 2, 2)), frontier_machine((2, 2, 1))
+        lv = best_strategy_many(phases_for(lm), strategies=GPU_STRATEGIES,
+                                seed=0)
+        fv = best_strategy_many(phases_for(fm), strategies=GPU_STRATEGIES,
+                                seed=0)
+        staged = [n for n, v in zip(counts, lv)
+                  if v.sim_winner == "host_staged"]
+        crossover = staged[0] if staged else 0
+        agree = float(np.mean([v.agree for v in lv + fv]))
+        small, large = lv[0].sim, lv[-1].sim
+        direct_small = small["host_staged"] / small["device_direct"]
+        staged_large = large["device_direct"] / large["host_staged"]
+        frontier_direct = float(np.mean([v.sim_winner == "device_direct"
+                                         for v in fv]))
+        return crossover, agree, direct_small, staged_large, frontier_direct
+
+    (crossover, agree, d_small, s_large, f_direct), us = _timed(run)
+    return [("hetero_lassen_crossover_msgs", us, crossover),
+            ("hetero_model_sim_winner_agreement", us, agree),
+            ("hetero_lassen_direct_small_speedup", us, d_small),
+            ("hetero_lassen_staged_large_speedup", us, s_large),
+            ("hetero_frontier_direct_wins", us, f_direct)]
+
+
 def bench_queue_position_n2_over_3():
     """Paper Sec. 5: random receive order costs ~n^2/3 (between n and n^2/2)."""
     from repro.net.simulator import queue_traversal_steps
@@ -329,6 +383,7 @@ ALL_BENCHES = [
     bench_fig7_fig9_contention,
     bench_amg_spmv_spgemm,
     bench_strategy_crossover,
+    bench_hetero_gpu_strategies,
     bench_queue_position_n2_over_3,
     bench_simulator_throughput,
     bench_strategy_rewrite_throughput,

@@ -39,8 +39,10 @@ from .primitives import (active_senders_per_node, transport_times,
                          batched_queue_traversal_steps)
 from .stack import PhaseStack, StackSimArrays, STACK_BACKENDS
 from .delta import ARENA_TYPES, DeltaStack
-from .strategies import (STRATEGIES, StrategyPlan, StrategyVerdict,
-                         standard, two_step, three_step, rewrite,
+from .strategies import (STRATEGIES, GPU_STRATEGIES, StrategyPlan,
+                         StrategyVerdict, strategies_for,
+                         standard, two_step, three_step, host_staged,
+                         device_direct, rewrite,
                          injected_payload, delivered_payload, best_strategy,
                          best_strategy_many)
 
@@ -51,8 +53,10 @@ __all__ = [
     "group_by_receiver", "sum_by_pairs", "segmented_arange",
     "grouped_queue_steps",
     "queue_traversal_steps", "batched_queue_traversal_steps",
-    "STRATEGIES", "StrategyPlan", "StrategyVerdict",
-    "standard", "two_step", "three_step", "rewrite",
+    "STRATEGIES", "GPU_STRATEGIES", "StrategyPlan", "StrategyVerdict",
+    "strategies_for",
+    "standard", "two_step", "three_step", "host_staged", "device_direct",
+    "rewrite",
     "injected_payload", "delivered_payload", "best_strategy",
     "best_strategy_many",
 ]

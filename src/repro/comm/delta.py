@@ -261,7 +261,8 @@ def _price(params, phase_arrays, flags, idx=None):
     if node_aware:
         return transport_times(size, params.alpha[loc, proto],
                                params.Rb[loc, proto],
-                               params.RN[loc, proto], ppn, is_net)
+                               params.RN[loc, proto], ppn, is_net,
+                               rails=params.n_rails)
     nl = params.network_locality
     alpha = params.alpha[nl][proto]
     Rb = params.Rb[nl][proto]
@@ -270,7 +271,8 @@ def _price(params, phase_arrays, flags, idx=None):
                                use_maxrate=False)
     # the flat max-rate level treats every message as network-class but keeps
     # the machine-classified active-sender counts (mirrors cost_arrays)
-    return transport_times(size, alpha, Rb, params.RN[nl][proto], ppn, True)
+    return transport_times(size, alpha, Rb, params.RN[nl][proto], ppn, True,
+                           rails=params.n_rails)
 
 
 def _build_state(ph: CommPhase) -> _PhaseState:
@@ -278,6 +280,12 @@ def _build_state(ph: CommPhase) -> _PhaseState:
     cost, paid once per phase like ``PhaseStack.build``."""
     m = ph.machine
     p = m.params
+    if getattr(ph, "loc_overridden", False):
+        raise ValueError(
+            "DeltaStack needs machine-classified phases: a phase built with "
+            "an explicit loc override (a staged strategy step) cannot be "
+            "mutated consistently — apply() would classify additions with "
+            "the machine's locality()")
     span = int(max(ph.n_procs, ph.src.max(initial=-1) + 1,
                    ph.dst.max(initial=-1) + 1, 1))
     st = _PhaseState.__new__(_PhaseState)
@@ -471,8 +479,10 @@ class DeltaStack:
     # -- construction ---------------------------------------------------------
     @classmethod
     def from_phases(cls, phases, *, verify: bool = False) -> "DeltaStack":
-        """Bind a sweep (bound ``CommPhase``s or a ``PhaseStack``) as a
-        delta arena.  Same-machine validation matches ``PhaseStack.build``."""
+        """Bind a sweep ``phases`` (bound ``CommPhase``s or a ``PhaseStack``)
+        as a delta arena.  Same-machine validation matches
+        ``PhaseStack.build``; ``verify=True`` re-checks the bit-identity
+        contract after construction and every ``apply``."""
         if isinstance(phases, PhaseStack):
             phases = phases.phases
         phases = tuple(phases)
@@ -575,7 +585,9 @@ class DeltaStack:
                     use_maxrate: bool = True, with_queue: bool = True,
                     with_net_bytes: bool = True, backend=None):
         """Per-phase ``(transport, max_recv, net_bytes)`` from the delta
-        caches — same contract as :meth:`PhaseStack.cost_arrays`.
+        caches — same contract (and same ``params`` / ``node_aware`` /
+        ``use_maxrate`` / ``with_queue`` / ``with_net_bytes`` / ``backend``
+        arguments) as :meth:`PhaseStack.cost_arrays`.
 
         The fast path serves the machine's own parameter tables on the numpy
         backend; a fitted-params override or an accelerator backend
@@ -611,10 +623,12 @@ class DeltaStack:
     # -- simulator-side aggregates --------------------------------------------
     def sim_arrays(self, recv_post_orders=None, arrival_orders=None,
                    backend=None) -> StackSimArrays:
-        """Raw simulator aggregates — same contract as
-        :meth:`PhaseStack.sim_arrays`.  Transport and link contention come
-        from the delta caches; default-order queue steps are the maintained
-        receive counts, custom orders pay the per-phase Fenwick walk.
+        """Raw simulator aggregates — same contract (and same
+        ``recv_post_orders`` / ``arrival_orders`` / ``backend`` arguments)
+        as :meth:`PhaseStack.sim_arrays`.  Transport and link contention
+        come from the delta caches; default-order queue steps are the
+        maintained receive counts, custom orders pay the per-phase Fenwick
+        walk.
         """
         backend_name, _ = PhaseStack._backend(backend)
         if backend_name != "numpy":

@@ -42,14 +42,39 @@ class CommPhase:
     torus_src: np.ndarray        # [n_msgs] sender's torus unit
     torus_dst: np.ndarray        # [n_msgs] receiver's torus unit
     active_ppn: np.ndarray       # [n_msgs] active senders on sender's node
+    loc_overridden: bool = False  # built with an explicit class override
 
     @classmethod
-    def build(cls, machine, src, dst, size, n_procs: int | None = None) -> "CommPhase":
+    def build(cls, machine, src, dst, size, n_procs: int | None = None,
+              loc=None) -> "CommPhase":
+        """Bind a message set ``(src, dst, size)`` to ``machine``.
+
+        Computes every derived per-message array (locality, protocol,
+        ``is_net``, sender node, torus endpoints, active-senders-per-node)
+        once, vectorized.  ``n_procs`` fixes the process count (default: the
+        largest endpoint + 1).  ``loc`` overrides the machine's locality
+        classification with an explicit class index (scalar or per-message
+        array) — how the GPU-aware strategy rewrites mark staged phases
+        (``h2d`` copies, ``host_staged`` inter-node traffic) whose class is
+        a *routing decision*, not a pair geometry; everything downstream
+        (protocol, ``is_net``, injection accounting, pricing) follows the
+        override.
+        """
         src = np.asarray(src, dtype=np.int64).ravel()
         dst = np.asarray(dst, dtype=np.int64).ravel()
         size = np.asarray(size, dtype=np.float64).ravel()
         params = machine.params
-        loc = np.asarray(machine.locality(src, dst), dtype=np.int64)
+        overridden = loc is not None
+        if loc is None:
+            loc = np.asarray(machine.locality(src, dst), dtype=np.int64)
+        else:
+            loc = np.broadcast_to(np.asarray(loc, dtype=np.int64),
+                                  src.shape).copy()
+            if loc.size and not (0 <= loc.min()
+                                 and loc.max() < params.n_locality):
+                raise ValueError(
+                    f"loc override out of range for a table with "
+                    f"{params.n_locality} locality classes")
         proto = params.protocol_of(size)
         is_net = loc >= params.network_locality
         send_node = np.asarray(machine.node_of(src), dtype=np.int64)
@@ -61,6 +86,7 @@ class CommPhase:
             torus_src=np.asarray(machine.torus_node_of(src), dtype=np.int64),
             torus_dst=np.asarray(machine.torus_node_of(dst), dtype=np.int64),
             active_ppn=active_senders_per_node(src, send_node, is_net),
+            loc_overridden=overridden,
         )
 
     # -- basic stats --------------------------------------------------------
@@ -77,12 +103,24 @@ class CommPhase:
         return float(self.size[self.is_net].sum())
 
     def recv_counts(self) -> np.ndarray:
+        """Messages received per process (``[n_procs]`` counts)."""
         return np.bincount(self.dst, minlength=self.n_procs)
 
     def max_msgs_per_proc(self) -> int:
+        """Worst per-process receive count (the queue model's ``n``)."""
         if self.n_msgs == 0:
             return 0
         return int(self.recv_counts().max())
+
+    def class_bytes(self) -> np.ndarray:
+        """Payload bytes per locality class (``[n_locality]``).
+
+        The class axis of the phase: how much traffic rides each rate-table
+        row (intra-device vs staged vs device-direct on a hetero machine).
+        ``PhaseStack.class_bytes`` is the stacked equivalent.
+        """
+        return np.bincount(self.loc, weights=self.size,
+                           minlength=self.machine.params.n_locality)
 
     # -- receive-queue accounting -------------------------------------------
     @functools.cached_property
@@ -136,7 +174,8 @@ class CommPhase:
         return dst_sorted[starts], lens, perm
 
     def random_arrival_order(self, rng: np.random.Generator) -> dict[int, np.ndarray]:
-        """Dict view of :meth:`random_arrival_flat` (receiver -> permutation)."""
+        """Dict view of :meth:`random_arrival_flat` (receiver -> permutation),
+        drawn from the same ``rng`` stream."""
         slots, lens, perm = self.random_arrival_flat(rng)
         return {int(s): ids
                 for s, ids in zip(slots, np.split(perm, np.cumsum(lens)[:-1]))}

@@ -22,6 +22,8 @@ import numpy as np
 def active_senders_per_node(src, node, is_net) -> np.ndarray:
     """Per-message count of actively-communicating processes on the sender's node.
 
+    ``src[i]`` / ``node[i]`` / ``is_net[i]`` are message ``i``'s sending
+    process, that process's node, and whether the message is network-class.
     A process is *active* on its node if it sends at least one network-class
     message; every network message then contends with its node's active-sender
     count for injection bandwidth (the max-rate mechanism).  Non-network
@@ -45,20 +47,28 @@ def active_senders_per_node(src, node, is_net) -> np.ndarray:
 # -- max-rate message pricing ------------------------------------------------
 
 def transport_times(size, alpha, Rb, RN, ppn, is_net,
-                    use_maxrate: bool = True) -> np.ndarray:
+                    use_maxrate: bool = True, rails: int = 1) -> np.ndarray:
     """Per-message transport time under the (node-aware) max-rate model.
 
-    ``alpha``/``Rb``/``RN`` are the already-indexed per-message parameter
+    ``size`` is bytes per message, ``ppn`` the active-senders count on each
+    sender's node; ``alpha``/``Rb``/``RN`` are the already-indexed per-message parameter
     arrays (locality x protocol lookup done by the caller, which owns the
     table layout).  Only network-class messages (``is_net``) contend for the
     node injection cap ``RN``; with ``use_maxrate=False`` the cap is ignored
     (pure postal model).
+
+    ``rails`` is the node's NIC count (``CommParams.n_rails``): a node's
+    ``ppn`` active senders divide across its rails, so only
+    ``ceil(ppn / rails)`` processes contend per NIC and ``RN`` is the
+    *per-rail* cap.  ``rails=1`` is bit-identical to the pre-rail formula.
     """
     size = np.asarray(size, dtype=np.float64)
     if not use_maxrate:
         return alpha + size / Rb
-    eff = np.where(np.asarray(is_net, dtype=bool),
-                   np.maximum(np.asarray(ppn, dtype=np.float64), 1.0), 1.0)
+    eff = np.asarray(ppn, dtype=np.float64)
+    if rails != 1:
+        eff = np.ceil(eff / rails)
+    eff = np.where(np.asarray(is_net, dtype=bool), np.maximum(eff, 1.0), 1.0)
     rate = np.minimum(RN, eff * Rb)
     return alpha + eff * size / rate
 
@@ -103,10 +113,11 @@ def segmented_arange(counts) -> np.ndarray:
 
 
 def group_by_receiver(dst, n_procs: int) -> tuple[np.ndarray, np.ndarray]:
-    """Stable grouping of message indices by destination process.
+    """Stable grouping of message indices by destination process ``dst``.
 
     Returns ``(order, bounds)``: ``order[bounds[p]:bounds[p+1]]`` are the
-    indices of messages destined to process ``p``, in posting (array) order.
+    indices of messages destined to process ``p`` (of ``n_procs``), in
+    posting (array) order.
     """
     dst = np.asarray(dst, dtype=np.int64)
     order = np.argsort(dst, kind="stable")
@@ -194,13 +205,14 @@ def _assemble_orders(flat, slots, counts, cbounds, local, group,
 def grouped_queue_steps(group, n_slots, recv_post_order=None,
                         arrival_order=None, groups=None,
                         describe=None) -> np.ndarray:
-    """Exact receive-queue traversal-step totals for many receiver slots.
+    """Exact receive-queue traversal-step totals for ``n_slots`` receiver slots.
 
     ``group[i]`` is the receiver slot of message ``i`` (a process id, or a
-    packed ``(phase, process)`` key for a stacked sweep).  The order specs
-    give each custom slot a permutation of the global indices of its
-    messages — posting order and envelope-arrival order — as a dict or in
-    the flat :func:`flat_orders` form; missing slots use array order (one
+    packed ``(phase, process)`` key for a stacked sweep).  The order specs —
+    ``recv_post_order`` (posting order) and ``arrival_order``
+    (envelope-arrival order) — give each custom slot a permutation of the
+    global indices of its messages, as a dict or in the flat
+    :func:`flat_orders` form; missing slots use array order (one
     step per arrival).  All custom slots pay the exact Fenwick walk in one
     batched sweep; assembly and validation of the custom permutations are
     vectorized (:func:`_assemble_orders`).

@@ -203,6 +203,26 @@ class PhaseStack:
         return self.masked_phase_sums(self.size, self.is_net)
 
     @functools.cached_property
+    def _class_bytes(self) -> np.ndarray:
+        """Dense [n_phases, n_locality] byte sums by locality class — the
+        packed-key bincount with the *class* axis in place of the process
+        axis.  Restricted to one phase the accumulation order is the
+        per-phase ``CommPhase.class_bytes`` order, so rows are bit-identical
+        to the loop."""
+        L = self.machine.params.n_locality
+        return np.bincount(self.phase_id * L + self.loc, weights=self.size,
+                           minlength=self.n_phases * L).reshape(
+            self.n_phases, L)
+
+    def class_bytes(self) -> np.ndarray:
+        """Per-phase payload bytes per locality class ([n_phases,
+        n_locality]) — one packed-key pass over the arena, row ``i``
+        bit-identical to ``phases[i].class_bytes()``.  The class-axis view
+        the hetero benches and examples report (how much traffic rides each
+        rate-table row)."""
+        return self._class_bytes
+
+    @functools.cached_property
     def _machine_tables(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """(alpha, Rb, RN) indexed per message with the machine's own
         parameter tables — shared by the simulator and every node-aware
@@ -218,7 +238,8 @@ class PhaseStack:
         both price (identical inputs, so one cached pass serves both)."""
         alpha, Rb, RN = self._machine_tables
         return transport_times(self.size, alpha, Rb, RN, self.active_ppn,
-                               self.is_net)
+                               self.is_net,
+                               rails=self.machine.params.n_rails)
 
     @functools.cached_property
     def _machine_transport(self) -> np.ndarray:
@@ -297,7 +318,11 @@ class PhaseStack:
         Returns ``(transport[N], max_recv[N], net_bytes[N])``: the worst
         per-process send-side transport sum, the worst per-process receive
         count (0s when ``with_queue=False``) and the total network-class
-        bytes (0s when ``with_net_bytes=False``) of every phase.
+        bytes (0s when ``with_net_bytes=False``) of every phase.  ``params``
+        substitutes a fitted table for the machine's own; ``node_aware`` /
+        ``use_maxrate`` select the ladder rung's transport formula;
+        ``backend`` routes the segmented reductions through
+        :mod:`repro.kernels.comm_stack`.
         :func:`repro.core.models.phase_cost_many` prices them into
         ``CostBreakdown`` rows bit-identical to the per-phase loop.
         """
@@ -342,7 +367,8 @@ class PhaseStack:
                     is_net = np.ones(self.total_msgs, dtype=bool)
                 if use_maxrate:
                     t_msg = transport_times(self.size, alpha, Rb, RN,
-                                            self._active_ppn_for(p), is_net)
+                                            self._active_ppn_for(p), is_net,
+                                            rails=p.n_rails)
                 else:
                     t_msg = transport_times(self.size, alpha, Rb, None, 1.0,
                                             False, use_maxrate=False)
@@ -432,7 +458,8 @@ class PhaseStack:
         return self._compute_link_contention("numpy")
 
     def link_contention_many(self, backend=None):
-        """(hottest contended-link bytes, total network bytes) per phase.
+        """(hottest contended-link bytes, total network bytes) per phase;
+        ``backend`` selects the reduction backend (numpy default, cached).
 
         One phase-tagged routing expansion: every inter-torus-unit network
         message of every phase is routed dimension-ordered in a single
@@ -491,6 +518,9 @@ class PhaseStack:
                    backend=None) -> StackSimArrays:
         """Raw simulator aggregates for the whole stack, one pass each.
 
+        ``recv_post_orders[i]`` / ``arrival_orders[i]`` are phase ``i``'s
+        receive-order specs (as in :meth:`queue_steps_many`); ``backend``
+        selects the reduction backend.
         :func:`repro.net.simulator.simulate_many` prices them into
         ``PhaseResult`` rows bit-identical to per-phase :func:`simulate`
         (numpy backend); phases with zero messages get the empty per-proc

@@ -30,6 +30,30 @@ Strategies (``STRATEGIES``):
     than a single process's ``R_b`` — bounds throughput.  The gather/scatter
     phases fan shares across the same ``k`` ranks.
 
+GPU-aware strategies (``GPU_STRATEGIES``, heterogeneous machines only —
+Lockhart et al. 2022's comparison):
+
+``host_staged``
+    Copy-to-host aggregation: each off-node payload is staged to host memory
+    (a ``d2h`` copy phase, one coalesced self-copy per sending process at the
+    ``h2d`` rate class), node-aggregated and k-way split like ``three_step``,
+    sent over the *host* NIC path (the inter phase carries an explicit
+    ``host_staged`` class override), scattered, and copied back device-side
+    (the ``h2d`` phase).  Pays two copy phases, rides the full multi-rail
+    host NIC bandwidth.
+``device_direct``
+    Per-device 3-step: each device's traffic is gathered to its device
+    leader (intra-device), aggregated per (send-device, recv-device) pair,
+    and injected GPU-NIC direct (``device_direct`` class) — every node's
+    devices become its injectors.  No copies, but the device-direct network
+    rates bound throughput.
+
+On-node share movement inside both GPU strategies is machine-classified
+(intra-device / cross-device), a deliberate simplification — the copy phases
+carry the staging cost.  ``strategies_for(machine)`` returns the sweep set a
+machine supports (the GPU pair requires device endpoints and the staged rate
+classes); ``best_strategy``/``best_strategy_many`` default to it.
+
 All rewrites are built from the engine's ``np.unique``/``bincount`` idiom
 (:func:`repro.comm.primitives.sum_by_pairs`,
 :func:`repro.comm.primitives.segmented_arange`) — no per-message Python
@@ -54,8 +78,34 @@ from .stack import as_stack
 
 STRATEGIES = ("standard", "two_step", "three_step")
 
+#: Heterogeneous-machine strategies (Lockhart's host-staged vs GPU-direct).
+GPU_STRATEGIES = ("host_staged", "device_direct")
+
 #: Phase roles, in execution order, as they appear in ``StrategyPlan.roles``.
-ROLES = ("standard", "local", "gather", "inter", "scatter")
+#: ``d2h`` / ``h2d`` are the staging copy phases (coalesced per-process
+#: self-copies at the ``h2d`` rate class) of the ``host_staged`` strategy.
+ROLES = ("standard", "local", "d2h", "gather", "inter", "scatter", "h2d")
+
+
+def strategies_for(machine) -> tuple[str, ...]:
+    """The strategy names worth sweeping on ``machine``: the three node-aware
+    CPU strategies everywhere, plus ``GPU_STRATEGIES`` when the machine has
+    device endpoints and its rate table carries the staged classes."""
+    p = machine.params
+    if getattr(machine, "devices_per_node", 0) and all(
+            p.has_class(c) for c in ("h2d", "host_staged", "device_direct")):
+        return STRATEGIES + GPU_STRATEGIES
+    return STRATEGIES
+
+
+def _require_hetero(machine, name: str) -> None:
+    """GPU-aware rewrites need device endpoints and the staged rate classes."""
+    if name not in strategies_for(machine):
+        raise ValueError(
+            f"the {name!r} strategy needs a heterogeneous machine (device "
+            f"endpoints plus h2d/host_staged/device_direct rate classes); "
+            f"{getattr(machine, 'name', machine)!r} has "
+            f"{machine.params.locality_names}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,6 +137,7 @@ class StrategyPlan:
         return sum(int(_remote_mask(ph).sum()) for ph in self.phases)
 
     def phase_by_role(self, role: str) -> CommPhase | None:
+        """The first phase playing ``role`` (see ``ROLES``), or None."""
         for ph, r in zip(self.phases, self.roles):
             if r == role:
                 return ph
@@ -135,10 +186,12 @@ def _avail(machine, nodes: np.ndarray, n_procs: int) -> np.ndarray:
 def _build(machine, parts, n_procs: int) -> tuple[tuple[CommPhase, ...],
                                                   tuple[str, ...]]:
     phases, roles = [], []
-    for role, src, dst, size in parts:
+    for part in parts:
+        role, src, dst, size = part[:4]
+        loc = part[4] if len(part) > 4 else None    # explicit class override
         if len(src):
             phases.append(CommPhase.build(machine, src, dst, size,
-                                          n_procs=n_procs))
+                                          n_procs=n_procs, loc=loc))
             roles.append(role)
     return tuple(phases), tuple(roles)
 
@@ -149,16 +202,27 @@ def standard(phase: CommPhase) -> StrategyPlan:
 
 
 def two_step(phase: CommPhase) -> StrategyPlan:
-    """Gather -> one inter-node message per node pair -> scatter."""
+    """Node-aware aggregation of one bound phase: gather -> one inter-node
+    message per node pair -> scatter."""
     return _aggregated(phase, "two_step", split=False)
 
 
 def three_step(phase: CommPhase) -> StrategyPlan:
-    """Two-step with each node pair's traffic split across k injectors."""
+    """Two-step of one bound phase with each node pair's traffic split
+    across k injectors."""
     return _aggregated(phase, "three_step", split=True)
 
 
-def _aggregated(phase: CommPhase, name: str, split: bool) -> StrategyPlan:
+def host_staged(phase: CommPhase) -> StrategyPlan:
+    """Copy-to-host aggregation of one bound phase (hetero machines only):
+    d2h copies -> node-level k-way-split aggregation over the *host* NIC
+    path -> h2d copies on the receiving side."""
+    _require_hetero(phase.machine, "host_staged")
+    return _aggregated(phase, "host_staged", split=True, staged=True)
+
+
+def _aggregated(phase: CommPhase, name: str, split: bool,
+                staged: bool = False) -> StrategyPlan:
     m, P = phase.machine, phase.n_procs
     ppn = np.int64(m.procs_per_node)
     remote = _remote_mask(phase)
@@ -170,6 +234,15 @@ def _aggregated(phase: CommPhase, name: str, split: bool) -> StrategyPlan:
     rs, rd, rsz = phase.src[remote], phase.dst[remote], phase.size[remote]
     rsn = phase.send_node[remote]
     rdn = np.asarray(m.node_of(rd), dtype=np.int64)
+
+    inter_loc = None
+    if staged:
+        # the staging decision, as explicit class overrides: each process
+        # coalesces its off-node payload into one host<->device copy, and
+        # the aggregated traffic rides the host NIC path
+        h2d = m.params.class_index("h2d")
+        inter_loc = m.params.class_index("host_staged")
+        parts.append(("d2h", *sum_by_pairs(rs, rs, rsz), h2d))
 
     # shares per message: 1 (leader only) or k = procs available on both ends
     if split:
@@ -197,7 +270,7 @@ def _aggregated(phase: CommPhase, name: str, split: bool) -> StrategyPlan:
     prep = np.repeat(np.arange(Sn.size), kp)
     prank = segmented_arange(kp)
     parts.append(("inter", Sn[prep] * ppn + prank, Dn[prep] * ppn + prank,
-                  B[prep] / kp[prep]))
+                  B[prep] / kp[prep], inter_loc))
 
     # scatter: the k receiving ranks on the destination node forward each
     # final destination its shares (a rank's own share needs no message)
@@ -206,21 +279,69 @@ def _aggregated(phase: CommPhase, name: str, split: bool) -> StrategyPlan:
     parts.append(("scatter", *sum_by_pairs(s_src[keep], s_dst[keep],
                                            share[keep])))
 
+    if staged:
+        parts.append(("h2d", *sum_by_pairs(rd, rd, rsz), h2d))
+
     phases, roles = _build(m, parts, P)
     return StrategyPlan(name, phase, phases, roles)
 
 
+def device_direct(phase: CommPhase) -> StrategyPlan:
+    """Per-device 3-step of one bound phase (hetero machines only): gather
+    to device leaders -> one GPU-NIC-direct message per (send-device,
+    recv-device) pair -> scatter.  Every node's devices are its injectors;
+    no host staging, so no copy phases."""
+    m, P = phase.machine, phase.n_procs
+    _require_hetero(m, "device_direct")
+    ppd = np.int64(m.procs_per_device)
+    dd = m.params.class_index("device_direct")
+    remote = _remote_mask(phase)
+    if not remote.any():            # nothing to aggregate: identity
+        return StrategyPlan("device_direct", phase, (phase,), ("standard",))
+
+    parts = [("local", phase.src[~remote], phase.dst[~remote],
+              phase.size[~remote])]
+    rs, rd, rsz = phase.src[remote], phase.dst[remote], phase.size[remote]
+    rsd = rs // ppd                 # global device of origin / destination
+    rdd = rd // ppd
+
+    # gather: origin -> its device leader (the device's lowest rank; the
+    # leader's own payload needs no message).  Intra-device traffic.
+    g_src, g_dst = rs, rsd * ppd
+    keep = g_src != g_dst
+    parts.append(("gather", *sum_by_pairs(g_src[keep], g_dst[keep],
+                                          rsz[keep])))
+
+    # inter: one aggregated leader-to-leader message per (send-device,
+    # recv-device) pair, explicitly on the device-direct network path
+    # (remote pairs always cross nodes, so the override is consistent with
+    # pair geometry even when the machine's default path is host_staged)
+    Sd, Dd, B = sum_by_pairs(rsd, rdd, rsz)
+    parts.append(("inter", Sd * ppd, Dd * ppd, B, dd))
+
+    # scatter: the receiving device leader forwards each final destination
+    # its payload (a leader's own payload needs no message)
+    s_src, s_dst = rdd * ppd, rd
+    keep = s_src != s_dst
+    parts.append(("scatter", *sum_by_pairs(s_src[keep], s_dst[keep],
+                                           rsz[keep])))
+
+    phases, roles = _build(m, parts, P)
+    return StrategyPlan("device_direct", phase, phases, roles)
+
+
 _REWRITES = {"standard": standard, "two_step": two_step,
-             "three_step": three_step}
+             "three_step": three_step,
+             "host_staged": host_staged, "device_direct": device_direct}
 
 
 def rewrite(phase: CommPhase, strategy: str) -> StrategyPlan:
-    """Apply one named strategy rewrite to a bound phase."""
+    """Apply one named ``strategy`` rewrite to a bound ``phase``."""
     try:
         fn = _REWRITES[strategy]
     except KeyError:
-        raise ValueError(f"unknown strategy {strategy!r}; "
-                         f"expected one of {STRATEGIES}") from None
+        raise ValueError(f"unknown strategy {strategy!r}; expected one of "
+                         f"{STRATEGIES + GPU_STRATEGIES}") from None
     return fn(phase)
 
 
@@ -248,8 +369,8 @@ def injected_payload(plan: StrategyPlan) -> np.ndarray:
 
 
 def delivered_payload(plan: StrategyPlan) -> np.ndarray:
-    """Per-process payload bytes *finally delivered* (mirror identity:
-    ``local + scatter + inter - scatter_sent``)."""
+    """Per-process payload bytes *finally delivered* by ``plan`` (mirror
+    identity: ``local + scatter + inter - scatter_sent``)."""
     P = plan.original.n_procs
     out = np.zeros(P)
     for ph, role in zip(plan.phases, plan.roles):
@@ -284,18 +405,22 @@ class StrategyVerdict:
         return self.model_winner == self.sim_winner
 
 
-def best_strategy(pattern, machine=None, *, strategies=STRATEGIES,
+def best_strategy(pattern, machine=None, *, strategies=None,
                   level: str = "contention", arrival: str = "random",
                   seed: int = 0, params=None) -> StrategyVerdict:
     """Sweep strategies over one phase; return the model's pick and the
     simulator's verdict.
 
     ``pattern`` is a :class:`repro.sparse.CommPattern` (bound to ``machine``)
-    or an already-bound :class:`CommPhase`.  ``arrival='random'`` drives the
-    simulator with the paper's Sec.-5 irregular regime (random envelope
-    arrival, seeded); ``'posted'`` uses best-case in-order arrival.  The
-    model prices phases at ladder ``level``; ``params`` substitutes a fitted
-    parameter table for the machine's ground truth on the model side only.
+    or an already-bound :class:`CommPhase`.  ``strategies`` defaults to
+    :func:`strategies_for` the bound machine — the three node-aware
+    strategies, plus the GPU-aware pair on heterogeneous machines.
+    ``arrival='random'`` drives the simulator with the paper's Sec.-5
+    irregular regime (random envelope arrival, from a generator seeded with
+    ``seed`` per candidate); ``'posted'`` uses best-case in-order arrival.
+    The model prices phases at ladder ``level``; ``params`` substitutes a
+    fitted parameter table for the machine's ground truth on the model side
+    only.
 
     The whole candidate set — every strategy's phase sequence — is priced in
     one stacked model pass and one stacked simulator pass: this is the
@@ -306,10 +431,12 @@ def best_strategy(pattern, machine=None, *, strategies=STRATEGIES,
                               params=params)[0]
 
 
-def best_strategy_many(patterns, machine=None, *, strategies=STRATEGIES,
+def best_strategy_many(patterns, machine=None, *, strategies=None,
                        level: str = "contention", arrival: str = "random",
                        seed: int = 0, params=None) -> list[StrategyVerdict]:
-    """:func:`best_strategy` for a whole sweep of patterns in ONE arena.
+    """:func:`best_strategy` for a whole sweep of ``patterns`` in ONE arena
+    (same ``machine`` / ``strategies`` / ``level`` / ``arrival`` / ``seed``
+    / ``params`` arguments).
 
     Every (pattern, strategy) candidate's phase sequence is rewritten and
     concatenated into a single :class:`~repro.comm.PhaseStack`, then the
@@ -341,7 +468,9 @@ def best_strategy_many(patterns, machine=None, *, strategies=STRATEGIES,
     plan_rows, spans, all_phases, all_arrivals = [], [], [], []
     for phase in phases:
         plans, row_spans = {}, {}
-        for name in strategies:
+        names = (strategies if strategies is not None
+                 else strategies_for(phase.machine))
+        for name in names:
             plan = rewrite(phase, name)
             rng = np.random.default_rng(seed)
             plans[name] = plan

@@ -11,8 +11,8 @@ Layout:
   decompose  — collective -> p2p messages on the physical pod; model pricing
   report     — accuracy tables
 """
-from .params import (CommParams, blue_waters, tpu_v5e, SHORT, EAGER, REND,
-                     PROTOCOL_NAMES)
+from .params import (CommParams, blue_waters, tpu_v5e, lassen, frontier,
+                     HETERO_LOCALITIES, SHORT, EAGER, REND, PROTOCOL_NAMES)
 from .models import (CostBreakdown, message_time, queue_time, contention_time,
                      phase_cost, model_ladder, MODEL_LEVELS,
                      phase_cost_phase, phase_cost_many, model_ladder_many,
@@ -26,7 +26,8 @@ from .decompose import (PodGeometry, MessageSet, decompose_collective,
                         CollectiveCost)
 
 __all__ = [
-    "CommParams", "blue_waters", "tpu_v5e", "SHORT", "EAGER", "REND",
+    "CommParams", "blue_waters", "tpu_v5e", "lassen", "frontier",
+    "HETERO_LOCALITIES", "SHORT", "EAGER", "REND",
     "PROTOCOL_NAMES",
     "CostBreakdown", "message_time", "queue_time", "contention_time",
     "phase_cost", "model_ladder", "MODEL_LEVELS",

@@ -67,9 +67,11 @@ def message_time(params: CommParams, size, loc, ppn=1, node_aware: bool = True,
     if not use_maxrate:
         return transport_times(size, alpha, Rb, None, 1.0, False,
                                use_maxrate=False)
-    # only network-class messages contend for injection bandwidth
+    # only network-class messages contend for injection bandwidth; a node's
+    # active senders divide across its NICs (CommParams.n_rails)
     return transport_times(size, alpha, Rb, params.RN[loc, proto], ppn,
-                           loc >= params.network_locality)
+                           loc >= params.network_locality,
+                           rails=params.n_rails)
 
 
 def queue_time(params: CommParams, n_messages) -> np.ndarray:

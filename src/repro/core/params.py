@@ -13,6 +13,15 @@ and adds two scalar penalties:
 
 ``CommParams`` stores these as dense ``[n_locality, n_protocol]`` tables so the
 model functions in :mod:`repro.core.models` can vectorize over messages.
+
+The locality axis is an open *rate table*, not a fixed three-class enum: the
+heterogeneous-node presets (Lockhart et al. 2022) extend it with device
+classes — intra-device, cross-device (NVLink / Infinity Fabric), host<->device
+copy (``h2d``), and two *network paths* per inter-node pair (``host_staged``
+vs ``device_direct`` GPU-NIC) — plus a per-node NIC/rail count ``n_rails``
+that the max-rate mechanism divides active senders across.  Model code never
+hard-codes class indices; it indexes the table by the per-message ``loc``
+array and resolves named classes via :meth:`CommParams.class_index`.
 """
 from __future__ import annotations
 
@@ -49,6 +58,10 @@ class CommParams:
     short_max / eager_max: protocol size thresholds in bytes.
     network_locality: index of the first locality class that traverses the
             network (used by contention/injection logic).
+    n_rails: NICs (injection rails) per node.  The max-rate mechanism divides
+            a node's active senders across its rails — ``ceil(ppn / n_rails)``
+            processes contend per NIC — so a multi-rail node saturates ``RN``
+            later than a single-NIC node with the same per-rail cap.
     """
 
     locality_names: tuple[str, ...]
@@ -60,6 +73,7 @@ class CommParams:
     short_max: int = DEFAULT_SHORT_MAX
     eager_max: int = DEFAULT_EAGER_MAX
     network_locality: int = 2
+    n_rails: int = 1
 
     @property
     def n_locality(self) -> int:
@@ -71,7 +85,28 @@ class CommParams:
         return np.where(size <= self.short_max, SHORT,
                         np.where(size <= self.eager_max, EAGER, REND)).astype(np.int32)
 
+    def class_index(self, name: str) -> int:
+        """Index of locality class ``name`` in this table's rate rows.
+
+        Strategy rewrites that override a phase's class (staged copies, the
+        ``host_staged`` network path) resolve indices through this instead of
+        hard-coding table positions; a table without the class raises a
+        ``ValueError`` naming the classes it does have.
+        """
+        try:
+            return self.locality_names.index(name)
+        except ValueError:
+            raise ValueError(
+                f"{name!r} is not a locality class of this parameter table; "
+                f"available classes: {self.locality_names}") from None
+
+    def has_class(self, name: str) -> bool:
+        """Whether ``name`` is a locality class of this rate table."""
+        return name in self.locality_names
+
     def replace(self, **kw) -> "CommParams":
+        """A copy of this table with the named fields replaced (``kw`` maps
+        field name to new value, as :func:`dataclasses.replace`)."""
         return dataclasses.replace(self, **kw)
 
 
@@ -147,6 +182,93 @@ def tpu_v5e() -> CommParams:
         short_max=DEFAULT_SHORT_MAX,
         eager_max=DEFAULT_EAGER_MAX,
         network_locality=1,             # ICI already traverses torus links
+    )
+
+
+# -- heterogeneous (GPU) nodes ----------------------------------------------
+#
+# Locality classes of the heterogeneous presets, "closest" first.  The first
+# three never traverse the network; ``h2d`` (host<->device copy) is only ever
+# assigned by an explicit class override (a copy is a staging decision, not a
+# pair geometry), and the two network classes are the two *paths* an
+# inter-node pair can take: staged through host memory and the host NIC, or
+# GPU-NIC direct (GPUDirect / NIC-per-GCD).  ``MachineSpec.locality``
+# classifies cross-node pairs with the machine's configured default path;
+# the GPU-aware strategy rewrites pit the two paths against each other.
+HETERO_LOCALITIES = ("intra_device", "cross_device", "h2d",
+                     "host_staged", "device_direct")
+HETERO_NETWORK_LOCALITY = 3        # host_staged and device_direct are net
+
+
+def lassen() -> CommParams:
+    """Lassen-like fat GPU node: 4 V100-class devices, dual-rail host NICs.
+
+    Design parameters in the spirit of Lockhart et al. 2022 (no such hardware
+    exists in this container; absolute values are calibrated on-hardware via
+    :mod:`repro.core.fitting`, exactly as the paper does with ping-pongs).
+    The load-bearing *shape*: the device-direct path has no copy overhead but
+    a low rendezvous rate (early GPUDirect RDMA reads), while the host-staged
+    path pays h2d copies yet rides the full dual-rail host NIC bandwidth —
+    which is what makes the two GPU-aware strategies cross over as traffic
+    grows.
+    """
+    alpha = _tbl([
+        # intra_device, cross_device, h2d,   host_staged, device_direct
+        [3.0e-06, 4.0e-06, 6.0e-06, 1.5e-06, 2.5e-06],   # short
+        [3.5e-06, 5.0e-06, 6.5e-06, 3.0e-06, 4.5e-06],   # eager
+        [5.0e-06, 7.0e-06, 8.0e-06, 5.0e-06, 9.0e-06],   # rendezvous
+    ])
+    Rb = _tbl([
+        [2.0e11, 3.0e10, 1.0e10, 3.0e09, 3.0e09],
+        [4.0e11, 3.5e10, 1.1e10, 8.0e09, 5.0e09],
+        [6.0e11, 4.0e10, 1.2e10, 1.25e10, 4.5e09],
+    ])
+    RN = _tbl([
+        [INF, INF, INF, INF, INF],
+        [INF, INF, INF, INF, INF],
+        [INF, INF, INF, 1.25e10, 6.5e09],  # per-rail / per-NIC injection cap
+    ])
+    return CommParams(
+        locality_names=HETERO_LOCALITIES,
+        alpha=alpha, Rb=Rb, RN=RN,
+        gamma=1.2e-08,                  # GPU-aware MPI match cost
+        delta=1.0e-10,
+        network_locality=HETERO_NETWORK_LOCALITY,
+        n_rails=2,                      # dual-rail IB per node
+    )
+
+
+def frontier() -> CommParams:
+    """Frontier-like 8-GCD node: a NIC per GCD pair, device-direct native.
+
+    The mirror image of :func:`lassen`: Slingshot NICs hang off the GPUs, so
+    the device-direct path gets the full per-NIC rate across 4 rails, while
+    staging through host memory costs an extra copy *and* a slower host send
+    path.  Design parameters (see :func:`lassen` on calibration).
+    """
+    alpha = _tbl([
+        # intra_device, cross_device, h2d,   host_staged, device_direct
+        [2.5e-06, 3.5e-06, 5.0e-06, 2.0e-06, 1.8e-06],   # short
+        [3.0e-06, 4.5e-06, 5.5e-06, 4.0e-06, 2.6e-06],   # eager
+        [4.0e-06, 6.0e-06, 7.0e-06, 7.0e-06, 4.0e-06],   # rendezvous
+    ])
+    Rb = _tbl([
+        [3.0e11, 4.0e10, 2.4e10, 3.0e09, 8.0e09],
+        [5.0e11, 4.5e10, 2.6e10, 6.0e09, 1.6e10],
+        [8.0e11, 5.0e10, 2.8e10, 1.0e10, 2.2e10],
+    ])
+    RN = _tbl([
+        [INF, INF, INF, INF, INF],
+        [INF, INF, INF, INF, INF],
+        [INF, INF, INF, 1.0e10, 2.5e10],   # per-NIC injection cap
+    ])
+    return CommParams(
+        locality_names=HETERO_LOCALITIES,
+        alpha=alpha, Rb=Rb, RN=RN,
+        gamma=1.0e-08,
+        delta=8.0e-11,
+        network_locality=HETERO_NETWORK_LOCALITY,
+        n_rails=4,                      # 4 Slingshot NICs per node
     )
 
 

@@ -7,7 +7,8 @@ queues, and routes bytes over a torus with per-link accounting.  The model in
 :mod:`repro.core` then has to predict this simulator across the same
 inferential gap the paper has between closed-form model and machine.
 """
-from .machine import MachineSpec, blue_waters_machine, tpu_v5e_machine
+from .machine import (MachineSpec, blue_waters_machine, tpu_v5e_machine,
+                      lassen_machine, frontier_machine)
 from .simulator import (PhaseResult, SequenceResult, simulate, simulate_phase,
                         simulate_many, simulate_sequence)
 from .pingpong import (
@@ -17,6 +18,7 @@ from .pingpong import (
 
 __all__ = [
     "MachineSpec", "blue_waters_machine", "tpu_v5e_machine",
+    "lassen_machine", "frontier_machine",
     "PhaseResult", "SequenceResult", "simulate", "simulate_phase",
     "simulate_many", "simulate_sequence",
     "pingpong_time", "pingpong_sweep", "ppn_sweep", "high_volume_pingpong",

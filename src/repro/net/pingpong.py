@@ -15,15 +15,38 @@ from .simulator import simulate_phase, PhaseResult
 
 
 def _pair_for(machine: MachineSpec, kind: str) -> tuple[int, int]:
-    """A canonical process pair for each locality class."""
+    """A canonical process pair on ``machine`` for a locality-class ``kind``.
+
+    Hetero kinds: ``intra_device`` needs more than one rank per device;
+    ``cross_device`` is the next device over; the network-path kinds
+    (``host_staged`` / ``device_direct``) give a cross-node pair and demand
+    that the machine is *configured* with that path (its ``locality`` is
+    what classifies the pair) — a mismatch raises instead of silently
+    measuring the other path's rate class.
+    """
     ppn = machine.procs_per_node
-    if kind == "intra_socket" or (kind == "closest"):
+    if kind in ("intra_socket", "closest", "intra_device"):
+        if kind == "intra_device" and machine.procs_per_device < 2:
+            raise ValueError(
+                f"{machine.name} has {machine.procs_per_device} rank(s) per "
+                "device; no intra-device pair exists")
         return 0, 1
-    if kind == "intra_node":
+    if kind in ("intra_node", "cross_device"):
+        if machine.devices_per_node:
+            return 0, machine.procs_per_device       # next device over
         if machine.sockets_per_node > 1:
             return 0, ppn // machine.sockets_per_node  # cross-socket
         return 0, 1
-    if kind == "inter_node":
+    if kind in ("inter_node", "host_staged", "device_direct"):
+        if kind != "inter_node":
+            want = machine.params.class_index(kind)  # raises w/o the class
+            if machine.cross_node_locality != want:
+                have = machine.params.locality_names[
+                    machine.cross_node_locality]
+                raise ValueError(
+                    f"{machine.name} is configured with network path "
+                    f"{have!r}; rebuild the preset with "
+                    f"network_path={kind!r} to measure that class")
         return 0, ppn * machine.nodes_per_torus_node  # next torus node over
     raise ValueError(f"unknown pair kind {kind!r}")
 

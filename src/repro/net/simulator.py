@@ -86,7 +86,7 @@ def simulate(phase: CommPhase,
     Rb = params.Rb[phase.loc, phase.proto]
     RN = params.RN[phase.loc, phase.proto]
     t_msg = transport_times(phase.size, alpha, Rb, RN, phase.active_ppn,
-                            phase.is_net)
+                            phase.is_net, rails=params.n_rails)
     per_proc = per_proc_sums(phase.src, t_msg, phase.n_procs)
     transport = float(per_proc.max())
 

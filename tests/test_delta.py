@@ -19,14 +19,18 @@ from repro.comm import CommPhase, DeltaStack, PhaseStack
 from repro.comm.delta import _MaxTree
 from repro.core import (MODEL_LEVELS, model_ladder_many, phase_cost_many,
                         phase_cost_phase)
-from repro.net import (blue_waters_machine, tpu_v5e_machine, simulate,
-                       simulate_many)
+from repro.net import (blue_waters_machine, frontier_machine, lassen_machine,
+                       tpu_v5e_machine, simulate, simulate_many)
 from repro.sparse import (RowPartition, SpmvPatternState, optimize_partition,
                           poisson_3d, spmv_comm_pattern,
                           spmv_comm_pattern_delta)
 
 BW = blue_waters_machine((2, 2, 2))
 TPU = tpu_v5e_machine((4, 4))
+# heterogeneous presets: the delta contract holds per rate table / rail count
+LASSEN = lassen_machine((2, 2, 2))
+FRONTIER = frontier_machine((2, 2, 1))
+MACHINES = [BW, TPU, LASSEN, FRONTIER]
 
 
 def _random_phase(machine, n, seed, n_procs=None):
@@ -126,7 +130,7 @@ def test_empty_delta_is_identity():
         d2.check()
 
 
-@pytest.mark.parametrize("machine", [BW, TPU], ids=lambda m: m.name)
+@pytest.mark.parametrize("machine", MACHINES, ids=lambda m: m.name)
 def test_random_move_sequences_bit_identical(machine):
     delta = DeltaStack.from_phases(_sweep(machine, seed=11))
     rng = np.random.default_rng(5)

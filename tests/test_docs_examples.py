@@ -1,0 +1,46 @@
+"""Executable documentation: every fenced ``python`` block in the docs runs.
+
+The docs promise working code — README's quickstart, api.md's usage
+snippets, paper_map.md's claim demonstrations.  This test extracts every
+fenced ``python`` block from those files and executes it (numpy backend,
+small shapes), so a snippet that drifts from the API fails CI instead of
+rotting silently.  Each block must be self-contained (its own imports);
+``sh`` blocks and inline code spans are not executed.
+"""
+import re
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+DOCS = [ROOT / "README.md",
+        ROOT / "docs" / "api.md",
+        ROOT / "docs" / "paper_map.md"]
+
+_FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def _blocks():
+    out = []
+    for doc in DOCS:
+        for i, m in enumerate(_FENCE.finditer(doc.read_text())):
+            out.append(pytest.param(doc, m.group(1),
+                                    id=f"{doc.name}#{i}"))
+    return out
+
+
+@pytest.mark.parametrize("doc", DOCS, ids=lambda p: p.name)
+def test_every_doc_has_executable_snippets(doc):
+    """Each documented surface ships at least one runnable example — and the
+    extraction regex cannot silently match nothing."""
+    assert doc.exists(), doc
+    assert _FENCE.search(doc.read_text()), \
+        f"{doc.name} has no fenced python block"
+
+
+@pytest.mark.parametrize("doc, code", _blocks())
+def test_docs_snippet_executes(doc, code):
+    """The block runs top to bottom in a fresh namespace (asserts inside the
+    snippet are part of the documented claim)."""
+    exec(compile(code, f"<{doc.name} snippet>", "exec"),
+         {"__name__": "__docs__"})

@@ -1,0 +1,338 @@
+"""The heterogeneous-node machine model (Lockhart et al. 2022 scenario).
+
+Four layers of certification:
+
+* **geometry** — ``MachineSpec.locality`` classifies intra-device /
+  cross-device / network pairs per the machine's configured network path,
+  and the device maps validate their shape invariants;
+* **rails** — multi-rail injection divides a node's active senders across
+  its NICs (``ceil(ppn / n_rails)`` contend per rail), with ``rails=1``
+  bit-identical to the pre-rail formula;
+* **strategies** — the GPU-aware rewrites conserve payload, keep every
+  phase role in its locality lane (copies are self-messages at the ``h2d``
+  class, staged inter traffic carries the ``host_staged`` override), and
+  are gated to machines that support them;
+* **crossover** — on the Lassen-like preset ``device_direct`` wins small
+  message counts and ``host_staged`` wins large ones, with the simulator
+  agreeing with the model at both ends (the acceptance contract), while the
+  Frontier-like preset — NICs on the GPUs — never leaves the direct path.
+"""
+import numpy as np
+import pytest
+
+from repro.comm import (CommPhase, DeltaStack, GPU_STRATEGIES, PhaseStack,
+                        STRATEGIES, best_strategy, delivered_payload,
+                        injected_payload, rewrite, strategies_for,
+                        transport_times)
+from repro.core import lassen, phase_cost_many
+from repro.core.models import message_time, phase_cost_phase
+from repro.net import (blue_waters_machine, frontier_machine, lassen_machine,
+                       tpu_v5e_machine, simulate_many)
+
+LASSEN = lassen_machine((2, 2, 2))
+FRONTIER = frontier_machine((2, 2, 1))
+HETERO = [LASSEN, FRONTIER]
+
+
+def _random_phase(machine, n, seed, size_lo=256, size_hi=8192):
+    rng = np.random.default_rng(seed)
+    P = machine.n_procs
+    src = rng.integers(0, P, n)
+    dst = (src + rng.integers(1, P, n)) % P
+    size = rng.integers(size_lo, size_hi, n).astype(float)
+    return CommPhase.build(machine, src, dst, size, n_procs=P)
+
+
+# ------------------------------------------------------ geometry ------------
+def test_locality_classifies_device_pairs():
+    m = LASSEN                      # 4 devices x 2 ranks, 8 ppn
+    names = m.params.locality_names
+    assert names.index("intra_device") == 0
+    assert names.index("cross_device") == 1
+    # rank pairs: same device, same node cross-device, cross-node
+    a = np.array([0, 0, 0, 8])
+    b = np.array([1, 2, 9, 17])
+    want = np.array([0,                          # ranks 0,1 share device 0
+                     1,                          # rank 2 is device 1
+                     names.index("device_direct"),   # nodes 0 vs 1
+                     names.index("device_direct")])  # nodes 1 vs 2
+    np.testing.assert_array_equal(m.locality(a, b), want)
+    assert np.array_equal(m.device_of(np.array([0, 1, 2, 9])),
+                          np.array([0, 0, 1, 4]))
+
+
+def test_locality_honors_network_path():
+    staged = lassen_machine((2, 1, 1), network_path="host_staged")
+    direct = lassen_machine((2, 1, 1), network_path="device_direct")
+    hs = staged.params.class_index("host_staged")
+    dd = direct.params.class_index("device_direct")
+    assert staged.locality([0], [8])[0] == hs
+    assert direct.locality([0], [8])[0] == dd
+    # both classes traverse the network
+    nl = staged.params.network_locality
+    assert hs >= nl and dd >= nl
+
+
+def test_machine_spec_validates_device_shape():
+    import dataclasses
+    with pytest.raises(ValueError, match="procs_per_device >= 1"):
+        dataclasses.replace(LASSEN, procs_per_device=0)
+    with pytest.raises(ValueError, match="must equal"):
+        dataclasses.replace(LASSEN, procs_per_node=10)
+    with pytest.raises(ValueError, match="no device endpoints"):
+        blue_waters_machine((2, 1, 1)).device_of([0])
+
+
+def test_class_index_and_has_class():
+    p = lassen()
+    assert p.locality_names[p.class_index("h2d")] == "h2d"
+    assert p.has_class("device_direct")
+    assert not p.has_class("inter_node")
+    with pytest.raises(ValueError, match="not a locality class"):
+        p.class_index("inter_node")
+
+
+def test_loc_override_validates_and_broadcasts():
+    scalar = CommPhase.build(LASSEN, [0, 1], [9, 10], [64.0, 64.0],
+                             n_procs=64, loc=2)
+    np.testing.assert_array_equal(scalar.loc, [2, 2])
+    assert not scalar.is_net.any()            # h2d is below network_locality
+    with pytest.raises(ValueError, match="loc override out of range"):
+        CommPhase.build(LASSEN, [0], [9], [64.0], n_procs=64, loc=7)
+
+
+# ------------------------------------------------------ rails ---------------
+def test_rails_divide_active_senders_per_nic():
+    alpha, Rb, RN = 1e-6, 1e9, 4e9
+    size = np.full(8, 1 << 20, dtype=float)
+    ppn = np.full(8, 8.0)
+    is_net = np.ones(8, dtype=bool)
+    one = transport_times(size, alpha, Rb, RN, ppn, is_net)
+    two = transport_times(size, alpha, Rb, RN, ppn, is_net, rails=2)
+    # 8 senders on 1 rail: eff=8, rate=min(4e9, 8e9); on 2 rails: eff=4
+    np.testing.assert_allclose(one, alpha + 8 * size / 4e9)
+    np.testing.assert_allclose(two, alpha + 4 * size / 4e9)
+    # ceil division: 3 senders on 2 rails -> 2 contend on the fuller NIC
+    three = transport_times(size, alpha, Rb, RN, np.full(8, 3.0), is_net,
+                            rails=2)
+    np.testing.assert_allclose(three, alpha + 2 * size / np.minimum(4e9, 2e9))
+
+
+def test_rails_one_is_bit_identical_to_prerail_formula():
+    rng = np.random.default_rng(3)
+    size = rng.integers(8, 1 << 20, 100).astype(float)
+    ppn = rng.integers(1, 16, 100).astype(float)
+    is_net = rng.random(100) < 0.7
+    alpha = rng.random(100) * 1e-6
+    Rb = rng.random(100) * 1e10 + 1e8
+    RN = np.where(rng.random(100) < 0.5, np.inf, 6.6e9)
+    want_eff = np.where(is_net, np.maximum(ppn, 1.0), 1.0)
+    want = alpha + want_eff * size / np.minimum(RN, want_eff * Rb)
+    got = transport_times(size, alpha, Rb, RN, ppn, is_net, rails=1)
+    assert np.array_equal(got, want)
+
+
+def test_model_ladder_prices_rails_on_lassen():
+    """message_time on a hetero machine uses ceil(ppn / n_rails) senders."""
+    m = LASSEN
+    p = m.params
+    dd = p.class_index("device_direct")
+    size = np.array([1 << 20], dtype=float)
+    t = message_time(p, size, np.array([dd]), ppn=np.array([8.0]))
+    eff = np.ceil(8.0 / p.n_rails)            # dual rail -> 4 per NIC
+    proto = p.protocol_of(size)[0]
+    want = p.alpha[dd, proto] + eff * size[0] / min(p.RN[dd, proto],
+                                                    eff * p.Rb[dd, proto])
+    assert t[0] == pytest.approx(want, rel=1e-12)
+
+
+# ------------------------------------------------------ class axis ----------
+@pytest.mark.parametrize("machine", HETERO, ids=lambda m: m.name)
+def test_stacked_class_bytes_bit_identical(machine):
+    phases = [_random_phase(machine, n, 11 + n) for n in (0, 1, 200, 40)]
+    # include override classes via a staged rewrite's phases
+    phases += list(rewrite(_random_phase(machine, 150, 5),
+                           "host_staged").phases)
+    stack = PhaseStack.build(phases)
+    got = stack.class_bytes()
+    assert got.shape == (len(phases), machine.params.n_locality)
+    for i, ph in enumerate(phases):
+        assert np.array_equal(got[i], ph.class_bytes())
+
+
+# ------------------------------------------------------ strategies ----------
+@pytest.mark.parametrize("machine", HETERO, ids=lambda m: m.name)
+@pytest.mark.parametrize("strategy", GPU_STRATEGIES)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_gpu_strategy_payload_conservation(machine, strategy, seed):
+    phase = _random_phase(machine, 400, seed)
+    plan = rewrite(phase, strategy)
+    P = phase.n_procs
+    np.testing.assert_allclose(
+        injected_payload(plan),
+        np.bincount(phase.src, weights=phase.size, minlength=P))
+    np.testing.assert_allclose(
+        delivered_payload(plan),
+        np.bincount(phase.dst, weights=phase.size, minlength=P))
+
+
+@pytest.mark.parametrize("machine", HETERO, ids=lambda m: m.name)
+def test_host_staged_roles_stay_in_their_lane(machine):
+    p = machine.params
+    plan = rewrite(_random_phase(machine, 500, 7), "host_staged")
+    assert "d2h" in plan.roles and "h2d" in plan.roles
+    for ph, role in zip(plan.phases, plan.roles):
+        dst_node = np.asarray(machine.node_of(ph.dst))
+        if role in ("d2h", "h2d"):            # coalesced self-copies
+            assert np.array_equal(ph.src, ph.dst)
+            assert (ph.loc == p.class_index("h2d")).all()
+            assert not ph.is_net.any()
+        elif role == "inter":                 # staged network path, cross-node
+            assert (ph.loc == p.class_index("host_staged")).all()
+            assert ph.is_net.all()
+            assert (ph.send_node != dst_node).all()
+        else:                                 # local / gather / scatter
+            assert (ph.send_node == dst_node).all()
+
+
+@pytest.mark.parametrize("machine", HETERO, ids=lambda m: m.name)
+def test_device_direct_roles_stay_in_their_lane(machine):
+    p = machine.params
+    plan = rewrite(_random_phase(machine, 500, 9), "device_direct")
+    assert plan.phase_by_role("inter") is not None
+    for ph, role in zip(plan.phases, plan.roles):
+        if role == "inter":
+            assert (ph.loc == p.class_index("device_direct")).all()
+            assert (ph.send_node
+                    != np.asarray(machine.node_of(ph.dst))).all()
+            # leaders inject: one sender per device, spread across the node
+            assert (ph.src % machine.procs_per_device == 0).all()
+            assert (ph.dst % machine.procs_per_device == 0).all()
+        elif role in ("gather", "scatter"):   # never leave the device
+            assert np.array_equal(np.asarray(machine.device_of(ph.src)),
+                                  np.asarray(machine.device_of(ph.dst)))
+
+
+def test_device_direct_gather_empty_with_one_rank_per_device():
+    """On Frontier every rank is its own device leader: no gather/scatter."""
+    plan = rewrite(_random_phase(FRONTIER, 300, 13), "device_direct")
+    assert "gather" not in plan.roles
+    assert "scatter" not in plan.roles
+
+
+def test_gpu_strategies_gated_to_hetero_machines():
+    bw_phase = CommPhase.build(blue_waters_machine((2, 1, 1)),
+                               [0], [16], [1024.0], n_procs=32)
+    for strategy in GPU_STRATEGIES:
+        with pytest.raises(ValueError, match="heterogeneous machine"):
+            rewrite(bw_phase, strategy)
+    assert strategies_for(blue_waters_machine((2, 1, 1))) == STRATEGIES
+    assert strategies_for(tpu_v5e_machine((4, 4))) == STRATEGIES
+    for m in HETERO:
+        assert strategies_for(m) == STRATEGIES + GPU_STRATEGIES
+
+
+def test_best_strategy_sweeps_gpu_strategies_by_default():
+    v = best_strategy(_random_phase(LASSEN, 200, 17), seed=0)
+    assert set(v.model) == set(STRATEGIES + GPU_STRATEGIES)
+    assert set(v.sim) == set(v.model)
+
+
+def test_intra_node_phase_degenerates_to_identity():
+    src = np.arange(0, 4)
+    dst = src + 4                     # same node (8 ppn), other devices
+    phase = CommPhase.build(LASSEN, src, dst, np.full(4, 64.0), n_procs=64)
+    for s in GPU_STRATEGIES:
+        plan = rewrite(phase, s)
+        assert plan.roles == ("standard",)
+        assert plan.phases == (phase,)
+
+
+def test_pingpong_pair_demands_the_configured_network_path():
+    """Asking for a network-path sweep the machine is not configured with
+    must raise, not silently measure the other path's rate class."""
+    from repro.net.pingpong import _pair_for, pingpong_sweep
+    staged = lassen_machine((2, 1, 1), network_path="host_staged")
+    assert _pair_for(staged, "host_staged") == (0, 8)
+    with pytest.raises(ValueError, match="network path"):
+        _pair_for(staged, "device_direct")
+    with pytest.raises(ValueError, match="network path"):
+        pingpong_sweep(LASSEN, "host_staged", [1024], reps=1, noise=0.0)
+    with pytest.raises(ValueError, match="not a locality class"):
+        _pair_for(blue_waters_machine((2, 1, 1)), "host_staged")
+    with pytest.raises(ValueError, match="intra-device"):
+        _pair_for(FRONTIER, "intra_device")     # 1 rank per GCD
+    # a staged-path sweep on the right preset actually runs
+    times = pingpong_sweep(staged, "host_staged", [256, 65536], reps=1,
+                           noise=0.0)
+    assert (times > 0).all()
+
+
+# ------------------------------------------------------ arenas --------------
+def test_delta_stack_rejects_loc_overridden_phases():
+    plan = rewrite(_random_phase(LASSEN, 200, 19), "host_staged")
+    staged = plan.phase_by_role("inter")
+    with pytest.raises(ValueError, match="machine-classified"):
+        DeltaStack.from_phases([staged])
+
+
+@pytest.mark.parametrize("machine", HETERO, ids=lambda m: m.name)
+def test_overridden_phases_ride_the_stack_bit_identically(machine):
+    """Staged phases (explicit class overrides) obey the stack contract."""
+    plan = rewrite(_random_phase(machine, 400, 21), "host_staged")
+    phases = list(plan.phases)
+    got = phase_cost_many(PhaseStack.build(phases))
+    want = [phase_cost_phase(ph) for ph in phases]
+    assert got == want
+
+
+# ------------------------------------------------------ the crossover -------
+def _verdict_at(machine, n, seed=42):
+    phase = _random_phase(machine, n, seed)
+    return best_strategy(phase, seed=0, strategies=GPU_STRATEGIES)
+
+
+def test_lassen_host_staged_device_direct_crossover():
+    """The acceptance contract: device_direct wins small message counts (no
+    copy overhead), host_staged wins large ones (multi-rail host NIC
+    bandwidth beats the GPUDirect read rate), and the simulator agrees with
+    the model at both ends of the sweep."""
+    counts = (8, 32, 128, 512, 2048)
+    verdicts = [_verdict_at(LASSEN, n) for n in counts]
+    sim_winners = [v.sim_winner for v in verdicts]
+    # both strategies win somewhere, direct -> staged as counts grow
+    assert sim_winners[0] == "device_direct"
+    assert sim_winners[-1] == "host_staged"
+    flips = sum(a != b for a, b in zip(sim_winners, sim_winners[1:]))
+    assert flips == 1                 # one clean crossover, no flapping
+    for v in verdicts:                # the model predicts every verdict
+        assert v.agree
+    # real margins at the endpoints, on both sides of the inferential gap
+    first, last = verdicts[0], verdicts[-1]
+    assert first.sim["device_direct"] < 0.8 * first.sim["host_staged"]
+    assert first.model["device_direct"] < 0.8 * first.model["host_staged"]
+    assert last.sim["host_staged"] < 0.9 * last.sim["device_direct"]
+    # the closed-form model compresses the margin (gamma n^2 upper bound on
+    # both candidates) but must still rank staged clearly ahead
+    assert last.model["host_staged"] < 0.95 * last.model["device_direct"]
+
+
+def test_frontier_stays_on_the_direct_path():
+    """NICs hang off the GPUs on the Frontier-like preset: staging through
+    host never wins, small or large."""
+    for n in (16, 1024):
+        v = _verdict_at(FRONTIER, n)
+        assert v.sim_winner == "device_direct"
+        assert v.agree
+
+
+def test_simulator_prices_staged_sequences():
+    """End-to-end: a staged plan's phases simulate without special cases —
+    copies contribute transport but neither network bytes nor contention."""
+    plan = rewrite(_random_phase(LASSEN, 300, 23), "host_staged")
+    results = simulate_many(list(plan.phases))
+    for res, role in zip(results, plan.roles):
+        if role in ("d2h", "h2d"):
+            assert res.total_net_bytes == 0.0
+            assert res.contention == 0.0
+            assert res.transport > 0.0

@@ -16,13 +16,18 @@ from repro.comm import (CommPhase, PhaseStack, STRATEGIES, best_strategy,
                         grouped_queue_steps, rewrite)
 from repro.core import (MODEL_LEVELS, model_ladder_many, phase_cost_many,
                         phase_cost_phase, sequence_cost)
-from repro.net import (blue_waters_machine, tpu_v5e_machine, simulate,
-                       simulate_many, simulate_sequence)
+from repro.net import (blue_waters_machine, frontier_machine, lassen_machine,
+                       tpu_v5e_machine, simulate, simulate_many,
+                       simulate_sequence)
 from repro.sparse import (RowPartition, build_hierarchy, elasticity_like_3d,
                           spmv_comm_pattern, stack_patterns)
 
 BW = blue_waters_machine((2, 2, 2))
 TPU = tpu_v5e_machine((4, 4))
+# the heterogeneous presets ride every bit-identity contract too
+LASSEN = lassen_machine((2, 2, 2))
+FRONTIER = frontier_machine((2, 2, 1))
+MACHINES = [BW, TPU, LASSEN, FRONTIER]
 
 
 def _random_phase(machine, n, seed, n_procs=None):
@@ -91,7 +96,7 @@ def test_empty_stack():
 
 
 # ------------------------------------------------- model-side identity ------
-@pytest.mark.parametrize("machine", [BW, TPU], ids=lambda m: m.name)
+@pytest.mark.parametrize("machine", MACHINES, ids=lambda m: m.name)
 @pytest.mark.parametrize("level", MODEL_LEVELS)
 def test_phase_cost_many_bit_identical(machine, level):
     phases = _sweep(machine)
@@ -140,14 +145,14 @@ def test_unknown_level_raises():
 
 
 # --------------------------------------------------- sim-side identity ------
-@pytest.mark.parametrize("machine", [BW, TPU], ids=lambda m: m.name)
+@pytest.mark.parametrize("machine", MACHINES, ids=lambda m: m.name)
 def test_simulate_many_bit_identical_default_orders(machine):
     phases = _sweep(machine, seed=7)
     _assert_results_equal(simulate_many(phases),
                           [simulate(ph) for ph in phases])
 
 
-@pytest.mark.parametrize("machine", [BW, TPU], ids=lambda m: m.name)
+@pytest.mark.parametrize("machine", MACHINES, ids=lambda m: m.name)
 def test_simulate_many_bit_identical_custom_orders(machine):
     phases = _sweep(machine, seed=9)
     rng = np.random.default_rng(0)
