@@ -1,0 +1,175 @@
+"""Arena-size x backend sweep for the PhaseStack reduction backends (PR 6).
+
+Rows (``name,us_per_call,derived``):
+
+``stack_backend_numpy_{small,large}``
+    Baseline: one uncached ``cost_arrays`` evaluation on the numpy backend
+    (a fresh ``dataclasses.replace`` clone of the params is passed per call
+    so the pricing cache can never hide the work).  ``derived`` is 1.0.
+
+``stack_auto_{small,large}``
+    The same evaluation under ``backend='auto'``.  ``derived`` is the
+    numpy/auto time ratio — the :mod:`benchmarks.perf_smoke` gate requires
+    it never drops below its noise floor (0.9x): the autotuned default must
+    never pick a backend slower than numpy.  On hosts without an
+    accelerator the probe reports an infinite crossover and auto *is* the
+    numpy path, so the ratio measures pure dispatch overhead.
+
+``stack_jax_large``
+    Device (jitted jax) backend on the large arena; ``derived`` is the
+    numpy/jax ratio.  Informational: on CPU-only hosts jax loses to
+    numpy — exactly why the autotuner exists.  Skipped without jax.
+
+``stack_jax_vs_onehot``
+    The acceptance row: the fused jitted segment-sum against the retired
+    one-hot matmul reduction it replaced (reimplemented locally below as
+    the reference), same data, both device-resident and jitted.
+    ``derived`` is onehot/fused — gated >= 1.0 in perf_smoke.  Skipped
+    without jax.
+
+Run directly for a CSV (and a ``BENCH_stack.json`` artifact)::
+
+    PYTHONPATH=src python -m benchmarks.bench_stack_backends [out.json]
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+SMALL_MSGS = 2_000
+LARGE_MSGS = 260_000
+ONEHOT_MSGS = 8_192
+ONEHOT_SEGS = 2_048
+
+
+def _best_of(fn, reps: int = 3, trials: int = 4):
+    out = fn()                                  # warm caches / first-call work
+    best = float("inf")
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn()
+        best = min(best, (time.perf_counter() - t0) / reps)
+    return best * 1e6, out
+
+
+def _arena(total_msgs: int, n_phases: int = 8, seed: int = 0):
+    """A ragged BW stack with ~total_msgs messages across n_phases phases."""
+    from repro.comm import CommPhase, PhaseStack
+    from repro.net import blue_waters_machine
+
+    machine = blue_waters_machine((4, 4, 2))
+    rng = np.random.default_rng(seed)
+    P = machine.n_procs
+    per = np.maximum(1, rng.multinomial(total_msgs, np.full(n_phases,
+                                                            1 / n_phases)))
+    phases = []
+    for n in per:
+        src = rng.integers(0, P, n)
+        dst = (src + rng.integers(1, P, n)) % P
+        size = rng.integers(1, 1 << 16, n).astype(np.float64)
+        phases.append(CommPhase.build(machine, src, dst, size))
+    return machine, PhaseStack.build(phases)
+
+
+def _time_backend(machine, stack, backend: str, reps: int):
+    # a fresh params clone per call defeats the pricing cache: every timed
+    # evaluation performs the full segmented reduction
+    def run():
+        p = dataclasses.replace(machine.params)
+        return stack.cost_arrays(p, backend=backend)
+    return _best_of(run, reps=reps)
+
+
+def bench_stack_backends():
+    from repro.kernels.comm_stack import have_jax
+
+    rows = []
+    for tag, total, reps in (("small", SMALL_MSGS, 5),
+                             ("large", LARGE_MSGS, 2)):
+        machine, stack = _arena(total)
+        us_np, ref = _time_backend(machine, stack, "numpy", reps)
+        us_auto, got = _time_backend(machine, stack, "auto", reps)
+        for a, b in zip(got, ref):
+            np.testing.assert_allclose(a, b, rtol=2e-4, atol=1e-12), \
+                "auto backend drifted from numpy"
+        rows.append((f"stack_backend_numpy_{tag}", us_np, 1.0))
+        rows.append((f"stack_auto_{tag}", us_auto, us_np / us_auto))
+        if tag == "large" and have_jax():
+            us_jax, got = _time_backend(machine, stack, "jax", reps)
+            for a, b in zip(got, ref):
+                np.testing.assert_allclose(a, b, rtol=2e-4, atol=1e-12)
+            rows.append(("stack_jax_large", us_jax, us_np / us_jax))
+    if have_jax():
+        rows.append(_bench_jax_vs_onehot())
+    return rows
+
+
+def _legacy_one_hot_reduce():
+    """The retired kernel, preserved as the comparison reference: segment
+    sums via a one-hot [n_values, n_seg] matmul — the O(n * n_seg) memory
+    blow-up that forced PALLAS_ONE_HOT_LIMIT and the host reroute."""
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def one_hot_sum(vals, ids, hot):
+        return hot.T @ vals
+
+    def run(vals, ids, n_seg):
+        hot = jax.nn.one_hot(ids, n_seg, dtype=jnp.float32)
+        return np.asarray(one_hot_sum(vals, ids, hot))
+    return run
+
+
+def _bench_jax_vs_onehot():
+    import jax.numpy as jnp
+
+    from repro.kernels.comm_stack import segment_sum
+
+    rng = np.random.default_rng(3)
+    vals = np.abs(rng.standard_normal(ONEHOT_MSGS)).astype(np.float32) * 10
+    ids = rng.integers(0, ONEHOT_SEGS, ONEHOT_MSGS)
+    dvals = jnp.asarray(vals)
+    dids = jnp.asarray(ids, dtype=jnp.int32)
+
+    legacy = _legacy_one_hot_reduce()
+    us_old, want = _best_of(lambda: legacy(dvals, dids, ONEHOT_SEGS), reps=3)
+    us_new, got = _best_of(
+        lambda: segment_sum(dvals, dids, ONEHOT_SEGS, backend="jax"), reps=3)
+    np.testing.assert_allclose(got, want.astype(np.float64), rtol=1e-3,
+                               atol=1e-3)
+    return ("stack_jax_vs_onehot", us_new, us_old / us_new)
+
+
+ALL_BENCHES = [bench_stack_backends]
+
+
+def main(save_json: str | None = None) -> None:
+    import json
+    import platform
+
+    print("name,us_per_call,derived")
+    rows = bench_stack_backends()
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived:.6g}", flush=True)
+    if save_json:
+        from repro.kernels.comm_stack import _probe_tag, autotune_crossover
+        payload = {
+            "rows": [{"name": n, "us_per_call": round(us, 1),
+                      "derived": round(d, 4)} for n, us, d in rows],
+            "probe_tag": _probe_tag(),
+            "autotune_crossover": autotune_crossover(),
+            "python": platform.python_version(),
+            "arena_msgs": {"small": SMALL_MSGS, "large": LARGE_MSGS},
+        }
+        with open(save_json, "w") as f:
+            json.dump(payload, f, indent=1, default=str)
+            f.write("\n")
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1] if len(sys.argv) > 1 else None)

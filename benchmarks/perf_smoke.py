@@ -1,17 +1,33 @@
 """CI perf smoke: the fast paths must never lose to their reference paths.
 
-Two gates, both thresholded at 1.0x — deliberately far below the typical
-speedups, so CI-runner throttling noise cannot flake the gate while a real
+Gates, each with a per-row threshold deliberately below the typical
+speedup, so CI-runner throttling noise cannot flake the gate while a real
 regression still trips it:
 
 * the ``stack_*`` rows of :mod:`benchmarks.bench_kernels` (stacked sweep vs
   per-phase loop on the AMG hierarchy x partition scan, bit-identity
   asserted inside the bench) — the PhaseStack sweep path must never be
-  slower than the loop;
+  slower than the loop (>= 1.0x);
 * the ``delta_local_search_64`` row of :mod:`benchmarks.bench_delta`
   (incremental re-pricing vs rebuild-per-candidate on the same 64-move
   local search, candidate costs asserted allclose inside the bench) — the
-  DeltaStack path must never be slower than a full rebuild.
+  DeltaStack path must never be slower than a full rebuild (>= 1.0x);
+* the ``stack_auto_*`` rows of :mod:`benchmarks.bench_stack_backends` —
+  the autotuned backend default must never pick a backend slower than
+  numpy.  On a host whose crossover probe reports ``inf`` (CPU-only jax,
+  or no jax) auto *is* the numpy path, so the ratio is pure dispatch
+  overhead plus timing noise on an identical code path; the thresholds
+  are documented noise floors rather than 1.0x for exactly that reason —
+  at 1.0 the gate would coin-flip on same-path jitter, while a backend
+  mispick shows up far below them.  The dispatch overhead is O(1)
+  (one memoized resolution), so the large-arena row sits at ~1.0x and
+  gates at 0.9x; the small-arena row divides the same microseconds by a
+  ~80us baseline and gates at 0.85x;
+* the ``stack_jax_vs_onehot`` row of the same bench — the fused jitted
+  segment reduction must beat the retired one-hot matmul kernel it
+  replaced (>= 1.0x; in practice it is orders of magnitude ahead).  The
+  row only exists where jax is importable; a CSV without it is accepted
+  when produced on a jax-less host.
 
 Usage::
 
@@ -27,7 +43,24 @@ import sys
 
 STACK_ROWS = ("stack_model_ladder", "stack_simulate", "stack_best_strategy")
 DELTA_ROWS = ("delta_local_search_64",)
-GATED_ROWS = STACK_ROWS + DELTA_ROWS
+#: autotuned-default rows: same-code-path comparison -> noise-floor gate
+AUTO_ROWS = ("stack_auto_small", "stack_auto_large")
+#: fused-kernel-vs-retired-one-hot row: present only where jax imports
+JAX_ROWS = ("stack_jax_vs_onehot",)
+
+GATED_ROWS = STACK_ROWS + DELTA_ROWS + AUTO_ROWS + JAX_ROWS
+OPTIONAL_ROWS = frozenset(JAX_ROWS)
+
+#: per-row minimum ``derived`` speedup (see the module docstring)
+THRESHOLD = {name: 1.0 for name in GATED_ROWS}
+THRESHOLD["stack_auto_small"] = 0.85      # O(1) dispatch / tiny baseline
+THRESHOLD["stack_auto_large"] = 0.9
+
+#: reference path and unit per row family, for the report line
+_REF = {**{n: ("loop", "us/sweep") for n in STACK_ROWS},
+        **{n: ("rebuild", "us/search") for n in DELTA_ROWS},
+        **{n: ("numpy", "us/eval") for n in AUTO_ROWS},
+        **{n: ("one-hot", "us/reduce") for n in JAX_ROWS}}
 
 
 def _rows_from_csv(path: str):
@@ -37,7 +70,7 @@ def _rows_from_csv(path: str):
             parts = line.strip().split(",")
             if parts and parts[0] in GATED_ROWS:
                 rows.append((parts[0], float(parts[1]), float(parts[2])))
-    missing = set(GATED_ROWS) - {name for name, _, _ in rows}
+    missing = set(GATED_ROWS) - {name for name, _, _ in rows} - OPTIONAL_ROWS
     if missing:
         raise SystemExit(f"{path} is missing gated rows {sorted(missing)} — "
                          "did benchmarks.run fail before producing them?")
@@ -50,17 +83,18 @@ def main() -> None:
     else:
         from .bench_delta import bench_delta_local_search
         from .bench_kernels import bench_phase_stack
-        rows = bench_phase_stack() + bench_delta_local_search()
+        from .bench_stack_backends import bench_stack_backends
+        rows = (bench_phase_stack() + bench_delta_local_search()
+                + [r for r in bench_stack_backends() if r[0] in GATED_ROWS])
     failed = False
     for name, us, speedup in rows:
-        # stack rows report us per sweep evaluation; the delta row reports
-        # us for the whole 64-move search
-        ref, unit = (("loop", "us/sweep") if name in STACK_ROWS
-                     else ("rebuild", "us/search"))
-        status = "ok" if speedup >= 1.0 else f"SLOWER THAN {ref.upper()}"
+        ref, unit = _REF[name]
+        floor = THRESHOLD[name]
+        ok = speedup >= floor
+        status = "ok" if ok else f"SLOWER THAN {ref.upper()} (< {floor}x)"
         print(f"{name}: {us:.0f} {unit}, {speedup:.2f}x vs {ref}  "
               f"[{status}]")
-        failed |= speedup < 1.0
+        failed |= not ok
     if failed:
         sys.exit(1)
 

@@ -7,10 +7,12 @@ import traceback
 
 
 def main() -> None:
-    from . import bench_paper, bench_kernels, bench_roofline, bench_delta
+    from . import (bench_paper, bench_kernels, bench_roofline, bench_delta,
+                   bench_stack_backends)
     print("name,us_per_call,derived")
     failures = 0
-    for mod in (bench_paper, bench_kernels, bench_roofline, bench_delta):
+    for mod in (bench_paper, bench_kernels, bench_roofline, bench_delta,
+                bench_stack_backends):
         for bench in mod.ALL_BENCHES:
             try:
                 for (name, us, derived) in bench():

@@ -594,7 +594,12 @@ class DeltaStack:
         delegates to a fresh arena over the current phases (built once per
         generation), so results stay correct either way.
         """
-        backend_name, _ = PhaseStack._backend(backend)   # eager validation
+        backend_name, mod = PhaseStack._backend(backend)  # eager validation
+        if backend_name == "auto":
+            # resolve the autotuned default here so auto -> numpy keeps the
+            # O(changed) delta fast path (auto -> jax delegates, correctly)
+            backend_name = mod.resolve_backend("auto",
+                                               n_values=self.total_msgs)
         N = self.n_phases
         zeros = np.zeros(N)
         if N == 0 or self.total_msgs == 0:
@@ -630,10 +635,13 @@ class DeltaStack:
         maintained receive counts, custom orders pay the per-phase Fenwick
         walk.
         """
-        backend_name, _ = PhaseStack._backend(backend)
+        backend_name, mod = PhaseStack._backend(backend)
+        if backend_name == "auto":
+            backend_name = mod.resolve_backend("auto",
+                                               n_values=self.total_msgs)
         if backend_name != "numpy":
             return self._fresh().sim_arrays(recv_post_orders, arrival_orders,
-                                            backend=backend)
+                                            backend=backend_name)
         if self.n_phases == 0:
             z = np.zeros(0)
             return StackSimArrays(z, [], [], z.copy(), z.copy())

@@ -47,7 +47,7 @@ def active_senders_per_node(src, node, is_net) -> np.ndarray:
 # -- max-rate message pricing ------------------------------------------------
 
 def transport_times(size, alpha, Rb, RN, ppn, is_net,
-                    use_maxrate: bool = True, rails: int = 1) -> np.ndarray:
+                    use_maxrate: bool = True, rails: int = 1, xp=np):
     """Per-message transport time under the (node-aware) max-rate model.
 
     ``size`` is bytes per message, ``ppn`` the active-senders count on each
@@ -61,15 +61,21 @@ def transport_times(size, alpha, Rb, RN, ppn, is_net,
     ``ppn`` active senders divide across its rails, so only
     ``ceil(ppn / rails)`` processes contend per NIC and ``RN`` is the
     *per-rail* cap.  ``rails=1`` is bit-identical to the pre-rail formula.
+
+    ``xp`` is the array namespace (:func:`repro.comm.xp.get_xp`): the
+    default :mod:`numpy` is the bit-identity reference; with ``jax.numpy``
+    the same formula runs device-resident in float32 (inputs already on
+    device stay there — the stack's device pricing path).
     """
-    size = np.asarray(size, dtype=np.float64)
+    f = np.float64 if xp is np else xp.float32
+    size = xp.asarray(size, dtype=f)
     if not use_maxrate:
         return alpha + size / Rb
-    eff = np.asarray(ppn, dtype=np.float64)
+    eff = xp.asarray(ppn, dtype=f)
     if rails != 1:
-        eff = np.ceil(eff / rails)
-    eff = np.where(np.asarray(is_net, dtype=bool), np.maximum(eff, 1.0), 1.0)
-    rate = np.minimum(RN, eff * Rb)
+        eff = xp.ceil(eff / rails)
+    eff = xp.where(xp.asarray(is_net, dtype=bool), xp.maximum(eff, 1.0), 1.0)
+    rate = xp.minimum(RN, eff * Rb)
     return alpha + eff * size / rate
 
 
@@ -204,7 +210,7 @@ def _assemble_orders(flat, slots, counts, cbounds, local, group,
 
 def grouped_queue_steps(group, n_slots, recv_post_order=None,
                         arrival_order=None, groups=None,
-                        describe=None) -> np.ndarray:
+                        describe=None, backend=None) -> np.ndarray:
     """Exact receive-queue traversal-step totals for ``n_slots`` receiver slots.
 
     ``group[i]`` is the receiver slot of message ``i`` (a process id, or a
@@ -219,7 +225,11 @@ def grouped_queue_steps(group, n_slots, recv_post_order=None,
 
     ``groups`` optionally supplies a precomputed ``(order, bounds)`` stable
     grouping (e.g. :meth:`repro.comm.CommPhase.receiver_groups`); ``describe``
-    renders a slot id in error messages.
+    renders a slot id in error messages.  ``backend`` selects where the
+    Fenwick sweep itself runs (``None``/``'numpy'`` = the in-process numpy
+    rounds; ``'jax'``/``'pallas'`` = the fused device walk in
+    :func:`repro.kernels.comm_stack.queue_walk` — bit-equal, it is integer
+    work).
     """
     group = np.asarray(group, dtype=np.int64)
     if describe is None:
@@ -251,7 +261,11 @@ def grouped_queue_steps(group, n_slots, recv_post_order=None,
                               describe)
     arrive = _assemble_orders(arr, slots, ccounts, cbounds, local, group,
                               describe)
-    steps = batched_queue_traversal_steps(posted, arrive, cbounds)
+    if backend in (None, "numpy"):
+        steps = batched_queue_traversal_steps(posted, arrive, cbounds)
+    else:
+        from repro.kernels.comm_stack import queue_walk
+        steps = queue_walk(posted, arrive, cbounds, backend=backend)
     qsteps[slots] = np.add.reduceat(steps, cbounds[:-1])
     return qsteps
 

@@ -28,11 +28,23 @@ the identical contiguous slice of the stacked mask (:meth:`masked_phase_sums`,
 O(n_phases) trivial slice-sums; all per-message work stays in the single
 pass).
 
-An optional JAX/Pallas backend (``backend='jax' | 'pallas'``, or the
-``REPRO_STACK_BACKEND`` env var) routes the packed-key transport/contention
-reductions through :mod:`repro.kernels.comm_stack`; numpy remains the
-default and the fallback, and backend results are allclose (not bit-equal,
-the accelerator path runs float32).
+Device backends (``backend='jax' | 'pallas' | 'auto'``, or the
+``REPRO_STACK_BACKEND`` env var) route the packed-key transport/contention
+reductions and the Fenwick queue sweep through
+:mod:`repro.kernels.comm_stack`, with the hot per-message columns cached
+device-resident on first use (one transfer per arena, not per call) and the
+message pricing itself run under the backend's array namespace
+(:mod:`repro.comm.xp`).  ``'auto'`` is the autotuned default: it collapses
+per call to numpy below the measured numpy/jax crossover size and to jax
+at/above it.  numpy remains the default and the fallback; float backend
+results are allclose (not bit-equal, the device path runs float32) while
+queue steps are integer work and bit-equal everywhere.
+
+Arenas can also be built *streaming* (:meth:`PhaseStack.build_streaming`):
+phases from any iterable are appended through fixed-size buffers and the
+stacked phase tuple is rebuilt as zero-copy views into the arena —
+bit-identical to monolithic :meth:`PhaseStack.build` without ever holding
+all source phases in RAM.
 
 Layering: numpy-only, below both consumers.  Pricing formulas stay where
 they live today — :mod:`repro.core.models` turns these aggregates into
@@ -57,7 +69,9 @@ __all__ = ["PhaseStack", "StackSimArrays", "as_stack", "STACK_BACKENDS"]
 #: Allowed values for the ``backend`` kwarg and the ``REPRO_STACK_BACKEND``
 #: env var.  Mirrors ``repro.kernels.comm_stack.BACKENDS`` — duplicated here
 #: so eager validation never has to import the (jax-adjacent) kernels module.
-STACK_BACKENDS = ("numpy", "jax", "pallas")
+#: ``'auto'`` is the autotuned default: numpy below the measured numpy/jax
+#: crossover size, jax at/above it, resolved per call.
+STACK_BACKENDS = ("numpy", "jax", "pallas", "auto")
 
 
 def as_stack(phases) -> "PhaseStack | None":
@@ -146,6 +160,94 @@ class PhaseStack:
             machine=machine, phases=phases, offsets=offsets,
             n_procs=np.asarray([ph.n_procs for ph in phases], dtype=np.int64),
             phase_id=np.repeat(np.arange(len(phases), dtype=np.int64), counts),
+            **cat)
+
+    @classmethod
+    def build_streaming(cls, phases, chunk_msgs: int = 1 << 16) -> "PhaseStack":
+        """Stream bound phases into an arena through fixed-size buffers.
+
+        ``phases`` is any *iterable* of bound CommPhases — a generator is
+        the point: each phase can be produced, copied into the staging
+        buffer and dropped before the next one exists, so arena setup never
+        needs all source phases in RAM at once.  Per-message columns are
+        appended into ``chunk_msgs``-sized staging buffers; a full buffer is
+        sealed into a chunk block, and each column is concatenated exactly
+        once at the end.  Peak extra memory is one chunk plus the sealed
+        blocks (which together are the arena), instead of every source
+        phase's arrays *plus* the arena.
+
+        The stacked ``phases`` tuple is rebuilt as zero-copy views: each
+        entry is a CommPhase whose arrays are slices of the arena columns.
+        The result is **bit-identical** to monolithic :meth:`build` for
+        every chunk size — a concatenation of chunk blocks is the same
+        array as a concatenation of per-phase columns, and every derived
+        aggregate reduces the same arena.
+        """
+        chunk_msgs = int(chunk_msgs)
+        if chunk_msgs < 1:
+            raise ValueError(f"chunk_msgs must be >= 1, got {chunk_msgs}")
+        machine = None
+        counts: list[int] = []
+        n_procs: list[int] = []
+        overridden: list[bool] = []
+        dtypes: dict[str, Any] = {}
+        blocks: dict[str, list] = {f: [] for f in _ARENA_FIELDS}
+        buf: dict[str, np.ndarray] = {}
+        fill = 0
+
+        def seal():
+            nonlocal fill
+            if fill:
+                for f in _ARENA_FIELDS:
+                    blocks[f].append(buf[f][:fill].copy())
+            fill = 0
+
+        for ph in phases:
+            if not isinstance(ph, CommPhase):
+                raise TypeError(
+                    f"PhaseStack stacks bound CommPhases, got {type(ph).__name__}")
+            if not counts:
+                machine = ph.machine
+                dtypes = {f: getattr(ph, f).dtype for f in _ARENA_FIELDS}
+            elif ph.machine is not machine:
+                raise ValueError(
+                    "mixed machines: every phase in a PhaseStack must be "
+                    "bound to the same machine object (rebind with "
+                    "CommPhase.build / CommPattern.bind first)")
+            counts.append(ph.n_msgs)
+            n_procs.append(ph.n_procs)
+            overridden.append(ph.loc_overridden)
+            if not buf and ph.n_msgs:
+                buf = {f: np.empty(chunk_msgs, dtype=dtypes[f])
+                       for f in _ARENA_FIELDS}
+            taken = 0
+            while taken < ph.n_msgs:
+                step = min(chunk_msgs - fill, ph.n_msgs - taken)
+                for f in _ARENA_FIELDS:
+                    buf[f][fill:fill + step] = \
+                        getattr(ph, f)[taken:taken + step]
+                fill += step
+                taken += step
+                if fill == chunk_msgs:
+                    seal()
+        seal()
+        counts_a = np.asarray(counts, dtype=np.int64)
+        offsets = np.concatenate([[0], np.cumsum(counts_a)]).astype(np.int64)
+        cat = {f: (np.concatenate(blocks[f]) if blocks[f]
+                   else np.zeros(0, dtype=dtypes[f]) if dtypes
+                   else np.zeros(0))
+               for f in _ARENA_FIELDS}
+        views = tuple(
+            CommPhase(machine=machine, n_procs=int(n_procs[i]),
+                      loc_overridden=bool(overridden[i]),
+                      **{f: cat[f][offsets[i]:offsets[i + 1]]
+                         for f in _ARENA_FIELDS})
+            for i in range(len(counts)))
+        return cls(
+            machine=machine, phases=views, offsets=offsets,
+            n_procs=np.asarray(n_procs, dtype=np.int64),
+            phase_id=np.repeat(np.arange(len(counts), dtype=np.int64),
+                               counts_a),
             **cat)
 
     # -- basic stats --------------------------------------------------------
@@ -285,12 +387,62 @@ class PhaseStack:
         backend = comm_stack.resolve_backend(backend)
         return backend, (None if backend == "numpy" else comm_stack)
 
+    def _resolved_backend(self, backend):
+        """Like :meth:`_backend`, with ``'auto'`` collapsed for this arena.
+
+        The autotuned default resolves against the arena's message count:
+        numpy below the measured numpy/jax crossover size (the exact numpy
+        paths and caches, bit-identical), jax at/above it
+        (:func:`repro.kernels.comm_stack.autotune_crossover`).  The choice
+        is memoized per arena — ``total_msgs`` is immutable and the
+        crossover is a process-wide constant, so re-resolving on every
+        reduction pass would only add dispatch overhead to the small-arena
+        path the autotuner exists to protect.
+        """
+        name, mod = self._backend(backend)
+        if name == "auto":
+            cached = self.__dict__.get("_auto_choice")
+            if cached is None:
+                cached = mod.resolve_backend("auto", n_values=self.total_msgs)
+                self.__dict__["_auto_choice"] = cached
+            name = cached
+            if name == "numpy":
+                mod = None
+        return name, mod
+
+    # -- device-resident columns --------------------------------------------
+    @functools.cached_property
+    def _device_store(self) -> dict:
+        """Device (jax) copies of arena columns, by attribute name — filled
+        lazily by :meth:`_dev`, so a device-backed sweep transfers each hot
+        column once per arena instead of once per call."""
+        return {}
+
+    def _dev(self, name):
+        """The named per-message column as a cached device array (float64
+        columns go over as float32, int64 keys as int32 — the device
+        contract is allclose/float32 for floats and exact for keys)."""
+        store = self._device_store
+        if name not in store:
+            import jax.numpy as jnp
+            a = np.asarray(getattr(self, name))
+            if a.dtype == np.float64:
+                a = a.astype(np.float32)
+            elif a.dtype == np.int64:
+                if a.size and (a.max() >= 2 ** 31 or a.min() < -2 ** 31):
+                    raise ValueError(
+                        f"arena column {name!r} exceeds int32 range; use "
+                        "backend='numpy' for sweeps this large")
+                a = a.astype(np.int32)
+            store[name] = jnp.asarray(a)
+        return store[name]
+
     # -- segmented reductions -----------------------------------------------
     def _phase_proc_sums(self, values, key, backend=None) -> np.ndarray:
         """Dense [n_phases, proc_span] sums of ``values`` by a packed
         (phase, process) key (``_src_key`` / ``_dst_key``)."""
         n = self.n_phases * self.proc_span
-        backend, mod = self._backend(backend)
+        backend, mod = self._resolved_backend(backend)
         if mod is None:
             dense = np.bincount(key, weights=values, minlength=n)
         else:
@@ -321,8 +473,10 @@ class PhaseStack:
         bytes (0s when ``with_net_bytes=False``) of every phase.  ``params``
         substitutes a fitted table for the machine's own; ``node_aware`` /
         ``use_maxrate`` select the ladder rung's transport formula;
-        ``backend`` routes the segmented reductions through
-        :mod:`repro.kernels.comm_stack`.
+        ``backend`` routes the pricing and segmented reductions through
+        :mod:`repro.kernels.comm_stack` (``'jax'``/``'pallas'`` run
+        device-resident off the cached column store; ``'auto'`` picks
+        numpy or jax per call at the autotuned crossover size).
         :func:`repro.core.models.phase_cost_many` prices them into
         ``CostBreakdown`` rows bit-identical to the per-phase loop.
         """
@@ -333,7 +487,7 @@ class PhaseStack:
         m = self.machine
         p = params if params is not None else m.params
         same_net = p.network_locality == m.params.network_locality
-        backend_name, _ = self._backend(backend)
+        backend_name, mod = self._resolved_backend(backend)
         flags = (node_aware, use_maxrate)
         cacheable = p is m.params and backend_name == "numpy"
         if cacheable and flags in self._ladder_cache:
@@ -343,6 +497,12 @@ class PhaseStack:
                 # ground-truth node-aware pricing: the pass shared with the
                 # simulator (identical inputs, identical result)
                 dense = self._machine_transport
+            elif mod is not None:
+                # device path: columns cached resident, tables indexed and
+                # the formula priced on device, one transfer of the reduced
+                # dense matrix back
+                dense = self._device_cost_dense(p, node_aware, use_maxrate,
+                                                backend_name, mod, same_net)
             else:
                 # protocol classes depend on size thresholds only: the
                 # machine-table classification is already cached
@@ -373,7 +533,7 @@ class PhaseStack:
                     t_msg = transport_times(self.size, alpha, Rb, None, 1.0,
                                             False, use_maxrate=False)
                 dense = self._phase_proc_sums(t_msg, self._src_key,
-                                              backend=backend)
+                                              backend="numpy")
             if cacheable:
                 self._ladder_cache[flags] = dense
         transport = dense.max(axis=1)
@@ -402,9 +562,77 @@ class PhaseStack:
             self.src, self.phase_id * node_span + self.send_node,
             self.loc >= params.network_locality)
 
+    def _device_cost_dense(self, p, node_aware, use_maxrate, backend_name,
+                           mod, same_net) -> np.ndarray:
+        """Ladder transport matrix priced end-to-end on device.
+
+        The cached device columns (:meth:`_dev`) supply the per-message
+        inputs, the (tiny) locality x protocol parameter tables are shipped
+        once and indexed on device, :func:`transport_times` runs under the
+        backend's array namespace and the packed-key reduction consumes the
+        device values directly — the only host transfer per call is the
+        reduced dense ``[n_phases, proc_span]`` matrix.
+        """
+        import jax.numpy as jnp
+
+        from .xp import get_xp
+        xp = get_xp(backend_name)
+        m = self.machine
+        proto = (self._dev("proto") if p is m.params
+                 else jnp.asarray(p.protocol_of(self.size).astype(np.int32)))
+        at = jnp.asarray(np.asarray(p.alpha, dtype=np.float32))
+        rb = jnp.asarray(np.asarray(p.Rb, dtype=np.float32))
+        rn = jnp.asarray(np.asarray(p.RN, dtype=np.float32))
+        if node_aware:
+            loc = self._dev("loc")
+            alpha, Rb, RN = at[loc, proto], rb[loc, proto], rn[loc, proto]
+            is_net = (self._dev("is_net") if same_net
+                      else loc >= p.network_locality)
+        else:
+            nl = p.network_locality
+            alpha, Rb, RN = at[nl, proto], rb[nl, proto], rn[nl, proto]
+            is_net = jnp.ones(self.total_msgs, dtype=bool)
+        if use_maxrate:
+            if p.network_locality == m.params.network_locality:
+                ppn = self._dev("active_ppn")
+            else:
+                ppn = jnp.asarray(
+                    self._active_ppn_for(p).astype(np.float32))
+            t_msg = transport_times(self._dev("size"), alpha, Rb, RN, ppn,
+                                    is_net, rails=p.n_rails, xp=xp)
+        else:
+            t_msg = transport_times(self._dev("size"), alpha, Rb, None, 1.0,
+                                    False, use_maxrate=False, xp=xp)
+        n = self.n_phases * self.proc_span
+        dense = mod.segment_sum(t_msg, self._dev("_src_key"), n,
+                                backend=backend_name)
+        return dense.reshape(self.n_phases, self.proc_span)
+
+    # -- per-rail byte counters ---------------------------------------------
+    def rail_bytes(self, n_rails: int | None = None) -> np.ndarray:
+        """Dense ``[n_phases, n_rails]`` injected network bytes per NIC rail.
+
+        The measurement-side counter behind multi-rail fitting
+        (:func:`repro.core.fitting.fit_rails`): each network-class message —
+        the same selection the routing expansion routes — is charged to its
+        sender's rail ``src % n_rails``, the static round-robin NIC binding
+        the max-rate rail model assumes.  One packed-key bincount
+        (``phase * n_rails + rail``).  ``n_rails`` defaults to the machine
+        table's own ``CommParams.n_rails``.
+        """
+        r = int(n_rails) if n_rails is not None else \
+            int(self.machine.params.n_rails)
+        if r < 1:
+            raise ValueError(f"n_rails must be >= 1, got {r}")
+        key = self.phase_id * r + self.src % r
+        w = np.where(self.is_net, self.size, 0.0)
+        return np.bincount(key, weights=w,
+                           minlength=self.n_phases * r).reshape(
+            self.n_phases, r)
+
     # -- receive-queue accounting -------------------------------------------
     def queue_steps_many(self, recv_post_orders=None,
-                         arrival_orders=None) -> np.ndarray:
+                         arrival_orders=None, backend=None) -> np.ndarray:
         """Dense [n_phases, proc_span] exact queue traversal-step totals.
 
         ``recv_post_orders[i]`` / ``arrival_orders[i]`` are phase ``i``'s
@@ -412,14 +640,19 @@ class PhaseStack:
         :meth:`CommPhase.queue_steps` takes).  All phases' custom receivers
         run in ONE lock-step Fenwick sweep: the rounds needed are the *max*
         messages-per-receiver over the whole stack, not the per-phase sum.
+        ``backend`` selects where the sweep runs — the device walk
+        (:func:`repro.kernels.comm_stack.queue_walk`) executes all rounds in
+        one fused program and, being integer work, is *bit-equal* to numpy.
         """
         P = self.proc_span
+        backend_name, _ = self._resolved_backend(backend)
         qsteps = grouped_queue_steps(
             self._dst_key, self.n_phases * P,
             recv_post_order=self._flatten_orders(recv_post_orders),
             arrival_order=self._flatten_orders(arrival_orders),
             groups=self._receiver_groups,
-            describe=lambda s: f"receiver {s % P} of phase {s // P}")
+            describe=lambda s: f"receiver {s % P} of phase {s // P}",
+            backend=backend_name)
         return qsteps.reshape(self.n_phases, P)
 
     def _flatten_orders(self, per_phase):
@@ -469,10 +702,10 @@ class PhaseStack:
         :meth:`CommPhase.link_contention` — and bit-identically so: within a
         phase the packed keys sort and accumulate in the per-phase order.
         """
-        backend_name, _ = self._backend(backend)
+        backend_name, _ = self._resolved_backend(backend)
         if backend_name == "numpy":
             return self._link_contention
-        return self._compute_link_contention(backend)
+        return self._compute_link_contention(backend_name)
 
     def _compute_link_contention(self, backend):
         net_bytes = self._net_bytes
@@ -498,17 +731,23 @@ class PhaseStack:
         per_src = np.bincount(inv, weights=w)     # bytes/(phase, link, source)
         pair = uk // src_span                     # (phase, link) runs
         starts = np.nonzero(np.r_[True, pair[1:] != pair[:-1]])[0]
-        backend, mod = self._backend(backend)
+        backend, mod = self._resolved_backend(backend)
         if mod is None:
             totals = np.add.reduceat(per_src, starts)
             largest = np.maximum.reduceat(per_src, starts)
         else:
             lens = np.diff(np.r_[starts, per_src.size])
             seg = np.repeat(np.arange(starts.size), lens)
-            totals = mod.segment_sum(per_src, seg, starts.size,
-                                     backend=backend)
-            largest = mod.segment_max(per_src, seg, starts.size,
-                                      backend=backend)
+            if backend == "pallas":
+                # the contention reduction needs both aggregates: one fused
+                # launch returns (sums, maxima) together
+                totals, largest = mod.fused_segment_reduce(per_src, seg,
+                                                           starts.size)
+            else:
+                totals = mod.segment_sum(per_src, seg, starts.size,
+                                         backend=backend)
+                largest = mod.segment_max(per_src, seg, starts.size,
+                                          backend=backend)
         run_phase = (pair[starts] // link_span).astype(np.int64)
         np.maximum.at(out, run_phase, totals - largest)
         return out, net_bytes
@@ -529,14 +768,15 @@ class PhaseStack:
         if self.n_phases == 0:
             z = np.zeros(0)
             return StackSimArrays(z, [], [], z.copy(), z.copy())
-        backend_name, _ = self._backend(backend)
+        backend_name, mod = self._resolved_backend(backend)
         if backend_name == "numpy":
             dense = self._machine_transport    # cached, shared with the model
         else:
-            dense = self._phase_proc_sums(self._machine_t_msg, self._src_key,
-                                          backend=backend)
-        qdense = self.queue_steps_many(recv_post_orders, arrival_orders)
-        max_link, net_bytes = self.link_contention_many(backend=backend)
+            dense = self._device_cost_dense(self.machine.params, True, True,
+                                            backend_name, mod, True)
+        qdense = self.queue_steps_many(recv_post_orders, arrival_orders,
+                                       backend=backend_name)
+        max_link, net_bytes = self.link_contention_many(backend=backend_name)
         counts = np.diff(self.offsets)
         empty_f = np.zeros(0)
         empty_i = np.zeros(0, dtype=qdense.dtype)

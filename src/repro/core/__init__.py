@@ -19,7 +19,7 @@ from .models import (CostBreakdown, message_time, queue_time, contention_time,
                      sequence_cost)
 from .topology import TorusTopology, average_hops, contention_ell, cube_side
 from .fitting import (fit_alpha_beta, fit_node_aware_table, fit_RN, fit_gamma,
-                      fit_delta)
+                      fit_delta, fit_rails)
 from .hlo import CollectiveOp, parse_collectives, collective_summary, shape_bytes
 from .decompose import (PodGeometry, MessageSet, decompose_collective,
                         price_collective, price_step, StepCommModel,
@@ -35,6 +35,7 @@ __all__ = [
     "sequence_cost",
     "TorusTopology", "average_hops", "contention_ell", "cube_side",
     "fit_alpha_beta", "fit_node_aware_table", "fit_RN", "fit_gamma", "fit_delta",
+    "fit_rails",
     "CollectiveOp", "parse_collectives", "collective_summary", "shape_bytes",
     "PodGeometry", "MessageSet", "decompose_collective", "price_collective",
     "price_step", "StepCommModel", "CollectiveCost",

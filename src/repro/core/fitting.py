@@ -77,6 +77,37 @@ def fit_RN(ks, times, size: float, alpha: float, Rb: float) -> float:
     return float(RN)
 
 
+def fit_rails(ks, times, rel_tol: float = 1e-9) -> int:
+    """Recover the per-node NIC (rail) count from a ppn saturation sweep.
+
+    Under the multi-rail max-rate model the sweep obeys
+    ``T(k) = alpha + ceil(k / r) * size / min(R_N, ceil(k / r) * R_b)``:
+    below saturation the ceil cancels out of the ratio (T is flat in k),
+    and once the per-rail cap ``R_N`` binds, T is a *staircase* that steps
+    up only when ``ceil(k / r)`` increments — every ``r``-th process.  The
+    rail count is therefore the step period: the median spacing between
+    consecutive rises when the sweep holds two or more, or the length of
+    the leading plateau before a single rise.  Use a rendezvous-regime
+    ``size`` (as for :func:`fit_RN`) so the cap binds early in the sweep.
+
+    Returns 1 when no rise is seen — a single rail and an unsaturated
+    sweep are indistinguishable from the measurement.
+    """
+    ks = np.asarray(ks, dtype=np.float64)
+    times = np.asarray(times, dtype=np.float64)
+    d = np.diff(times)
+    if d.size == 0:
+        return 1
+    thresh = rel_tol * float(np.abs(times).max())
+    rises = np.nonzero(d > thresh)[0]
+    if rises.size == 0:
+        return 1
+    if rises.size >= 2:
+        return int(round(float(np.median(np.diff(ks[rises])))))
+    # one rise: the first step ends the leading plateau of length r
+    return int(round(float(ks[rises[0] + 1] - ks[0])))
+
+
 def fit_gamma(n_msgs, measured, modeled_no_queue) -> float:
     """gamma from reversed-order HighVolumePingPong: T - T_model ~ gamma*n^2."""
     n = np.asarray(n_msgs, dtype=np.float64)

@@ -1,27 +1,34 @@
-"""Optional JAX / Pallas backends for the PhaseStack segmented reductions.
+"""Accelerator backends for the PhaseStack segmented passes.
 
 The stacked sweep engine (:mod:`repro.comm.stack`) reduces per-message
-quantities to per-(phase, process) / per-(phase, link) aggregates with two
-primitives: segmented sum and segmented max over packed integer keys.  This
-module provides accelerator implementations of exactly those two:
+quantities to per-(phase, process) / per-(phase, link) aggregates with
+segmented sums/maxima over packed integer keys, and replays receive-queue
+walks with a batched lock-step Fenwick sweep.  This module provides the
+device implementations of all three:
 
 ``backend='jax'``
-    ``jax.ops.segment_sum`` / ``segment_max`` under ``jax.jit`` — the
-    scalable path (scatter-add, O(total messages)).
+    ``jax.ops.segment_sum`` / ``segment_max`` under ``jax.jit`` and a jitted
+    ``lax.fori_loop`` Fenwick walk (:func:`queue_walk`) — the scalable
+    path: O(total messages) scatter work, the whole queue sweep one device
+    program with no host round-trip between rounds.
 ``backend='pallas'``
-    A Pallas segment-reduce kernel: the message stream is chunked, each
-    ``(segment-block, chunk)`` grid step builds the chunk's one-hot
-    membership matrix against its 128-wide segment block and reduces it on
-    the MXU (``values @ one_hot`` for sums, a masked row-max for maxima),
-    accumulating across chunks in the resident output block — the
-    flash-attention accumulate idiom.  O(messages x segments) work: it is
-    the MXU-shaped demonstration/parity backend, not the scalable one, so
-    requests whose padded one-hot work exceeds ``PALLAS_ONE_HOT_LIMIT``
-    reroute to the jitted jax path (:func:`pallas_within_limit`).
+    Fused Pallas kernels.  :func:`fused_segment_reduce` tiles the message
+    stream into ``_CHUNK``-wide grid steps and scatter-accumulates each
+    chunk into the full padded output row kept resident across the grid
+    (the flash-attention accumulate idiom) — sums and maxima in one launch,
+    O(messages) work, so there is no one-hot work ceiling and no size
+    reroute.  The queue walk wraps the same lock-step Fenwick rounds in a
+    single Pallas program.  On hosts without a TPU/GPU the kernels run in
+    interpret mode (parity, not speed).
+``backend='auto'`` (the resolved form of ``backend=None``)
+    The autotuned default: picks numpy below the measured numpy/jax
+    crossover size and jax at/above it (:func:`autotune_crossover`).
 
-numpy is the default everywhere and the silent fallback when jax is absent
-(:func:`resolve_backend` warns once).  Backend parity is *allclose*, not
-bit-equal: the accelerator paths run float32 (tests pin the tolerance).
+numpy is the bit-identity reference and the silent fallback when jax is
+absent (:func:`resolve_backend` warns once for explicit device requests).
+Backend parity for the float reductions is *allclose*, not bit-equal (the
+device paths run float32); the queue walk is integer work and bit-equal on
+every backend.
 
 This module imports jax lazily so that importing it — and everything in
 :mod:`repro.comm` — stays numpy-only.
@@ -29,34 +36,18 @@ This module imports jax lazily so that importing it — and everything in
 from __future__ import annotations
 
 import functools
+import json
+import os
+import time
 import warnings
 
 import numpy as np
 
-BACKENDS = ("numpy", "jax", "pallas")
+BACKENDS = ("numpy", "jax", "pallas", "auto")
 
-_CHUNK = 512        # messages per grid step
-_SEG_BLOCK = 128    # segments per output block (one lane tile)
-
-#: Ceiling on the Pallas kernel's total one-hot work, in (padded message,
-#: padded segment) cells.  The kernel is O(messages x segments) — every grid
-#: step materializes a (_CHUNK, _SEG_BLOCK) membership matrix, and interpret
-#: mode (CPU) buffers far more than that — so a large sweep arena would both
-#: crawl and blow up memory.  Above this limit the request silently reroutes
-#: to the scalable jitted ``segment_sum``/``segment_max`` path (O(messages)
-#: scatter-add); numpy fallback behaviour is unchanged.
-PALLAS_ONE_HOT_LIMIT = 1 << 24
-
-
-def pallas_within_limit(n_values: int, n_seg: int) -> bool:
-    """Would the Pallas one-hot kernel stay under ``PALLAS_ONE_HOT_LIMIT``?
-
-    Uses the *padded* extents (chunk/segment-block multiples), i.e. exactly
-    the cell count the kernel would sweep.
-    """
-    n_pad = max(_CHUNK, -(-n_values // _CHUNK) * _CHUNK)
-    s_pad = max(_SEG_BLOCK, -(-n_seg // _SEG_BLOCK) * _SEG_BLOCK)
-    return n_pad * s_pad <= PALLAS_ONE_HOT_LIMIT
+_CHUNK = 512        # messages per fused-kernel grid step
+_LANE = 128         # lane tile: device output rows pad to multiples of this
+_SEG_BLOCK = _LANE  # historical alias (the retired one-hot kernel's block)
 
 
 def have_jax() -> bool:
@@ -67,18 +58,133 @@ def have_jax() -> bool:
         return False
 
 
-def resolve_backend(backend: str) -> str:
-    """Validate a backend name; fall back to numpy (with a warning) when the
-    accelerator stack is unavailable."""
+def resolve_backend(backend: str | None = None,
+                    n_values: int | None = None) -> str:
+    """Resolve a backend request to a concrete backend name.
+
+    ``None`` means the *autotuned default* (``'auto'``).  ``'auto'`` picks
+    numpy below the measured numpy/jax crossover size and jax at/above it;
+    pass ``n_values`` (the reduction's input length) to collapse it to a
+    concrete choice here — without ``n_values`` the string ``'auto'`` is
+    returned for the caller to resolve per call.  Explicit ``'jax'`` /
+    ``'pallas'`` requests fall back to numpy with a warning when jax is not
+    importable; ``'auto'`` falls back silently (it is a default, not a
+    request).
+    """
+    if backend is None:
+        backend = "auto"
     if backend not in BACKENDS:
         raise ValueError(
             f"unknown stack backend {backend!r}; expected one of {BACKENDS}")
     if backend != "numpy" and not have_jax():
-        warnings.warn(f"stack backend {backend!r} requested but jax is not "
-                      "importable; falling back to numpy", RuntimeWarning,
-                      stacklevel=2)
+        if backend != "auto":
+            warnings.warn(f"stack backend {backend!r} requested but jax is "
+                          "not importable; falling back to numpy",
+                          RuntimeWarning, stacklevel=2)
         return "numpy"
+    if backend == "auto" and n_values is not None:
+        return "numpy" if n_values < autotune_crossover() else "jax"
     return backend
+
+
+# -- autotuned numpy/jax crossover -------------------------------------------
+
+#: probe sizes for the crossover search (geometric, covers the realistic
+#: arena range on both CPU-only and accelerator hosts)
+_PROBE_SIZES = (1 << 13, 1 << 15, 1 << 17, 1 << 19)
+_PROBE_SEGMENTS = 256
+
+_crossover: float | None = None
+
+
+def _probe_tag() -> str:
+    """Cache key tying a persisted probe to the software/device stack."""
+    parts = [np.__version__]
+    try:
+        import jax
+        parts += [jax.__version__, jax.default_backend()]
+    except Exception:  # pragma: no cover - environment-dependent
+        parts.append("nojax")
+    return "/".join(parts)
+
+
+def _best_time(fn, reps: int = 3) -> float:
+    fn()                                              # warm (jit, caches)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _probe_pair(n: int) -> tuple[float, float]:
+    """(numpy, jax) best-of times for one packed-key segment sum of ``n``."""
+    import jax
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    ids = rng.integers(0, _PROBE_SEGMENTS, size=n)
+    vals = rng.random(n)
+    t_np = _best_time(
+        lambda: np.bincount(ids, weights=vals, minlength=_PROBE_SEGMENTS))
+    seg_sum, _ = _jax_segment_ops()
+    d_vals = jax.device_put(jnp.asarray(vals, jnp.float32))
+    d_ids = jax.device_put(jnp.asarray(ids, jnp.int32))
+    t_jax = _best_time(
+        lambda: seg_sum(d_vals, d_ids, _PROBE_SEGMENTS).block_until_ready())
+    return t_np, t_jax
+
+
+def autotune_crossover(refresh: bool = False) -> float:
+    """The measured input size where the jitted jax segment reduction starts
+    beating numpy's ``bincount`` (``float('inf')`` when it never does — e.g.
+    CPU-only jax, or jax absent).
+
+    Resolution order: in-process memo -> ``REPRO_STACK_AUTOTUNE`` env
+    override (a number, ``inf`` allowed) -> on-disk probe cache (the path in
+    ``REPRO_STACK_AUTOTUNE_CACHE``, ignored when its software tag no longer
+    matches) -> a live probe over ``_PROBE_SIZES`` with device-resident
+    inputs (first size where jax wins).  ``refresh=True`` forces a new probe
+    and rewrites the disk cache.  The probe costs a few jit compiles once
+    per process; pin the env var to skip it entirely.
+    """
+    global _crossover
+    if _crossover is not None and not refresh:
+        return _crossover
+    env = os.environ.get("REPRO_STACK_AUTOTUNE")
+    if env is not None and not refresh:
+        _crossover = float(env)
+        return _crossover
+    path = os.environ.get("REPRO_STACK_AUTOTUNE_CACHE")
+    tag = _probe_tag()
+    if path and not refresh and os.path.exists(path):
+        try:
+            with open(path) as fh:
+                rec = json.load(fh)
+            if rec.get("tag") == tag:
+                _crossover = float(rec["crossover"])
+                return _crossover
+        except (OSError, ValueError, KeyError):  # pragma: no cover - corrupt
+            pass                                 # cache: reprobe below
+    if not have_jax():
+        _crossover = float("inf")
+        return _crossover
+    cross = float("inf")
+    for n in _PROBE_SIZES:
+        t_np, t_jax = _probe_pair(n)
+        if t_jax < t_np:
+            cross = float(n)
+            break
+    _crossover = cross
+    if path:
+        try:
+            with open(path, "w") as fh:
+                json.dump({"tag": tag, "crossover": cross,
+                           "sizes": list(_PROBE_SIZES)}, fh)
+        except OSError:  # pragma: no cover - read-only cache dir
+            pass
+    return cross
 
 
 # -- jitted segment reductions ----------------------------------------------
@@ -98,102 +204,371 @@ def _jax_segment_ops():
     return seg_sum, seg_max
 
 
-# -- Pallas segment-reduce kernel --------------------------------------------
-
-def _segreduce_kernel(ids_ref, vals_ref, out_ref, *, op: str):
+def _as_device(a, dtype):
+    """``a`` as a device array: jax arrays pass through untouched (already
+    resident), anything else is converted once."""
     import jax
+    import jax.numpy as jnp
+    if isinstance(a, jax.Array):
+        return a
+    return jnp.asarray(np.asarray(a), dtype=dtype)
+
+
+def _size_of(a) -> int:
+    return int(a.size) if hasattr(a, "size") else len(a)
+
+
+# -- fused Pallas segment reduce ---------------------------------------------
+
+def _fused_segreduce_kernel(ids_ref, vals_ref, sum_ref, max_ref):
+    """One grid step: scatter-accumulate chunk ``c`` into the resident row.
+
+    The output blocks map to ``(0, 0)`` on every step, so they stay resident
+    in VMEM across the whole grid while each step's ``(1, _CHUNK)`` message
+    tile streams through — sums and maxima in the same pass.  Padded lanes
+    carry the sink segment id (the last padded column) and neutral values,
+    so no masking is needed.
+    """
     import jax.numpy as jnp
     from jax.experimental import pallas as pl
 
-    sb, c = pl.program_id(0), pl.program_id(1)
+    c = pl.program_id(0)
 
     @pl.when(c == 0)
     def _init():
-        fill = 0.0 if op == "sum" else -jnp.inf
-        out_ref[...] = jnp.full_like(out_ref, fill)
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        max_ref[...] = jnp.full_like(max_ref, -jnp.inf)
 
-    ids = ids_ref[0, :]                                   # [M]
-    vals = vals_ref[0, :]                                 # [M]
-    m, s = ids.shape[0], out_ref.shape[1]
-    cols = jax.lax.broadcasted_iota(jnp.int32, (m, s), 1) + sb * s
-    member = ids[:, None] == cols                         # [M, S] one-hot
-    if op == "sum":
-        out_ref[...] += jnp.dot(vals[None, :],
-                                member.astype(vals.dtype))
-    else:
-        part = jnp.max(jnp.where(member, vals[:, None], -jnp.inf),
-                       axis=0)                            # [S]
-        out_ref[...] = jnp.maximum(out_ref[...], part[None, :])
+    ids = ids_ref[0, :]
+    vals = vals_ref[0, :]
+    sum_ref[0, :] = sum_ref[0, :].at[ids].add(vals)
+    max_ref[0, :] = max_ref[0, :].at[ids].max(vals)
 
 
 @functools.cache
-def _pallas_segreduce(n_pad: int, s_pad: int, op: str):
+def _pallas_segreduce(n_pad: int, s_pad: int):
     import jax
     import jax.numpy as jnp
     from jax.experimental import pallas as pl
 
-    grid = (s_pad // _SEG_BLOCK, n_pad // _CHUNK)
     return pl.pallas_call(
-        functools.partial(_segreduce_kernel, op=op),
-        grid=grid,
+        _fused_segreduce_kernel,
+        grid=(n_pad // _CHUNK,),
         in_specs=[
-            pl.BlockSpec((1, _CHUNK), lambda sb, c: (0, c)),
-            pl.BlockSpec((1, _CHUNK), lambda sb, c: (0, c)),
+            pl.BlockSpec((1, _CHUNK), lambda c: (0, c)),
+            pl.BlockSpec((1, _CHUNK), lambda c: (0, c)),
         ],
-        out_specs=pl.BlockSpec((1, _SEG_BLOCK), lambda sb, c: (0, sb)),
-        out_shape=jax.ShapeDtypeStruct((1, s_pad), jnp.float32),
+        out_specs=[
+            pl.BlockSpec((1, s_pad), lambda c: (0, 0)),
+            pl.BlockSpec((1, s_pad), lambda c: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, s_pad), jnp.float32),
+            jax.ShapeDtypeStruct((1, s_pad), jnp.float32),
+        ],
         interpret=jax.default_backend() == "cpu",
     )
 
 
-def _pallas_reduce(values, seg_ids, n_seg: int, op: str) -> np.ndarray:
+def fused_segment_reduce(values, seg_ids,
+                         n_seg: int) -> tuple[np.ndarray, np.ndarray]:
+    """One fused Pallas launch -> ``(segment sums, segment maxima)``.
+
+    Replaces the retired one-hot membership kernel: each grid step
+    scatter-accumulates one message chunk into the full padded output row
+    resident in VMEM, so the work is O(messages) — any arena size runs in
+    one launch and ``PALLAS_ONE_HOT_LIMIT`` rerouting is gone.  Padding to
+    ``s_pad = roundup(n_seg + 1, _LANE)`` guarantees a sink column for the
+    padded message lanes.  Empty segments report sum 0 and max 0 (the
+    contention reduction's inputs are non-negative byte counts).
+    """
     import jax.numpy as jnp
 
+    values = np.asarray(values)
+    seg_ids = np.asarray(seg_ids)
     n = values.size
     n_pad = max(_CHUNK, -(-n // _CHUNK) * _CHUNK)
-    s_pad = max(_SEG_BLOCK, -(-n_seg // _SEG_BLOCK) * _SEG_BLOCK)
-    ids = np.full((1, n_pad), -1, dtype=np.int32)         # -1 matches no block
+    s_pad = max(_LANE, -(-(n_seg + 1) // _LANE) * _LANE)
+    ids = np.full((1, n_pad), s_pad - 1, dtype=np.int32)
     ids[0, :n] = seg_ids
     vals = np.zeros((1, n_pad), dtype=np.float32)
     vals[0, :n] = values
-    out = _pallas_segreduce(n_pad, s_pad, op)(jnp.asarray(ids),
-                                              jnp.asarray(vals))
-    out = np.asarray(out)[0, :n_seg].astype(np.float64)
-    if op == "max":
-        out[np.isneginf(out)] = 0.0                       # empty segments
-    return out
+    s, mx = _pallas_segreduce(n_pad, s_pad)(jnp.asarray(ids),
+                                            jnp.asarray(vals))
+    sums = np.asarray(s)[0, :n_seg].astype(np.float64)
+    maxs = np.asarray(mx)[0, :n_seg].astype(np.float64)
+    maxs[np.isneginf(maxs)] = 0.0                     # empty segments
+    return sums, maxs
 
 
-# -- public entry points -----------------------------------------------------
+# -- public segment reductions -----------------------------------------------
 
-def segment_sum(values, seg_ids, n_seg: int, backend: str = "numpy") -> np.ndarray:
-    """Sum ``values`` into ``n_seg`` bins by ``seg_ids`` on the chosen backend."""
-    values = np.asarray(values, dtype=np.float64)
-    seg_ids = np.asarray(seg_ids, dtype=np.int64)
+def segment_sum(values, seg_ids, n_seg: int,
+                backend: str | None = None) -> np.ndarray:
+    """Sum ``values`` into ``n_seg`` bins by ``seg_ids`` on the chosen
+    backend (``None``/``'auto'`` = the autotuned default).  Device inputs
+    (jax arrays) stay resident on the jax path; the reduced dense result is
+    returned on the host."""
+    if backend in (None, "auto"):
+        backend = resolve_backend("auto", n_values=_size_of(seg_ids))
     if backend == "numpy":
-        return np.bincount(seg_ids, weights=values, minlength=n_seg)
-    if backend == "pallas" and pallas_within_limit(values.size, n_seg):
-        return _pallas_reduce(values, seg_ids, n_seg, "sum")
+        return np.bincount(np.asarray(seg_ids, dtype=np.int64),
+                           weights=np.asarray(values, dtype=np.float64),
+                           minlength=n_seg)
+    if backend == "pallas":
+        return fused_segment_reduce(values, seg_ids, n_seg)[0]
     import jax.numpy as jnp
     seg_sum, _ = _jax_segment_ops()
-    return np.asarray(seg_sum(jnp.asarray(values, jnp.float32),
-                              jnp.asarray(seg_ids), n_seg), dtype=np.float64)
+    return np.asarray(seg_sum(_as_device(values, jnp.float32),
+                              _as_device(seg_ids, jnp.int32), n_seg),
+                      dtype=np.float64)
 
 
-def segment_max(values, seg_ids, n_seg: int, backend: str = "numpy") -> np.ndarray:
+def segment_max(values, seg_ids, n_seg: int,
+                backend: str | None = None) -> np.ndarray:
     """Per-segment maximum (0.0 for empty segments, matching the stacked
     contention reduction where all inputs are non-negative byte counts)."""
-    values = np.asarray(values, dtype=np.float64)
-    seg_ids = np.asarray(seg_ids, dtype=np.int64)
+    if backend in (None, "auto"):
+        backend = resolve_backend("auto", n_values=_size_of(seg_ids))
     if backend == "numpy":
         out = np.zeros(n_seg)
-        np.maximum.at(out, seg_ids, values)
+        np.maximum.at(out, np.asarray(seg_ids, dtype=np.int64),
+                      np.asarray(values, dtype=np.float64))
         return out
-    if backend == "pallas" and pallas_within_limit(values.size, n_seg):
-        return _pallas_reduce(values, seg_ids, n_seg, "max")
+    if backend == "pallas":
+        return fused_segment_reduce(values, seg_ids, n_seg)[1]
     import jax.numpy as jnp
     _, seg_max = _jax_segment_ops()
-    out = np.asarray(seg_max(jnp.asarray(values, jnp.float32),
-                             jnp.asarray(seg_ids), n_seg), dtype=np.float64)
+    out = np.asarray(seg_max(_as_device(values, jnp.float32),
+                             _as_device(seg_ids, jnp.int32), n_seg),
+                     dtype=np.float64)
     out[np.isneginf(out)] = 0.0
     return out
+
+
+# -- device Fenwick queue walk -----------------------------------------------
+
+def _queue_layout(posted, arrival, bounds):
+    """Host-side layout for the lock-step Fenwick sweep (mirrors the numpy
+    reference in :func:`repro.comm.primitives.batched_queue_traversal_steps`
+    exactly: same private-tree packing, same initial tree contents)."""
+    from repro.comm.primitives import segmented_arange
+
+    posted = np.asarray(posted, dtype=np.int64)
+    arrival = np.asarray(arrival, dtype=np.int64)
+    bounds = np.asarray(bounds, dtype=np.int64)
+    N = int(posted.size)
+    starts = bounds[:-1]
+    counts = np.diff(bounds)
+    region_of = np.repeat(np.arange(counts.size), counts)
+    start_of = starts[region_of]
+    pos = np.empty(N, dtype=np.int64)
+    pos[start_of + posted] = np.arange(N) - start_of
+    b = pos[start_of + arrival]                       # slot of j-th arrival
+    span = np.ones(counts.size, dtype=np.int64)
+    while (span < counts).any():
+        span = np.where(span < counts, span * 2, span)
+    blk = span + 1
+    toff = np.concatenate([[0], np.cumsum(blk)])
+    tree = np.zeros(toff[-1] + 1, dtype=np.int64)     # +1: shared sink
+    li = segmented_arange(blk)
+    c_rep = np.repeat(counts, blk)
+    lo = li - (li & -li)
+    tree[:-1] = np.minimum(li, c_rep) - np.minimum(lo, c_rep)
+    depth = int(span.max(initial=1)).bit_length()
+    rounds = int(counts.max(initial=0))
+    return tree, b, starts, counts, toff[:-1], span, depth, rounds
+
+
+@functools.cache
+def _jax_queue_walk(depth: int):
+    """Jitted lock-step Fenwick sweep: all rounds in one ``fori_loop``, no
+    host round-trip between rounds.  ``depth`` (the per-round chain length)
+    is static and unrolled; shapes retrace per arena layout."""
+    import jax
+    import jax.numpy as jnp
+
+    def walk(tree, b, starts, counts, toff, span, rounds):
+        sink = tree.shape[0] - 1
+        steps0 = jnp.zeros(b.shape, dtype=tree.dtype)
+
+        def round_body(j, state):
+            tree, steps = state
+            mask = counts > j
+            s = jnp.where(mask, starts + j, 0)
+            p = jnp.where(mask, b[s] + 1, 0)
+            # prefix: maskless gathers (a chain that reaches 0 keeps
+            # reading its region's always-zero root)
+            i = p
+            acc = jnp.zeros_like(p)
+            for _ in range(depth):
+                acc = acc + tree[toff + i]
+                i = i - (i & -i)
+            steps = steps.at[s].add(jnp.where(mask, acc, 0))
+            # removal: chains past the region span (and inactive regions)
+            # park at the shared sink slot, which is never read
+            i = p
+            bound = jnp.where(mask, span, -1)
+            idx = jnp.where(mask, toff + i, sink)
+            delta = jnp.where(mask, -1, 0).astype(tree.dtype)
+            for _ in range(depth):
+                tree = tree.at[idx].add(delta)
+                i = i + (i & -i)
+                idx = jnp.where(i > bound, sink, toff + i)
+            return tree, steps
+
+        _, steps = jax.lax.fori_loop(0, rounds, round_body, (tree, steps0))
+        return steps
+
+    return jax.jit(walk)
+
+
+def _queue_walk_pallas_kernel(tree_ref, b_ref, starts_ref, counts_ref,
+                              toff_ref, span_ref, steps_ref, *,
+                              depth: int, rounds: int):
+    """The same lock-step rounds as :func:`_jax_queue_walk`, fused into one
+    Pallas program: every tree/arrival array resident for the whole sweep."""
+    import jax
+    import jax.numpy as jnp
+
+    tree = tree_ref[0, :]
+    b = b_ref[0, :]
+    starts = starts_ref[0, :]
+    counts = counts_ref[0, :]
+    toff = toff_ref[0, :]
+    span = span_ref[0, :]
+    sink = tree.shape[0] - 1
+    steps0 = jnp.zeros(b.shape, dtype=tree.dtype)
+
+    def round_body(j, state):
+        tree, steps = state
+        mask = counts > j
+        s = jnp.where(mask, starts + j, 0)
+        p = jnp.where(mask, b[s] + 1, 0)
+        i = p
+        acc = jnp.zeros_like(p)
+        for _ in range(depth):
+            acc = acc + tree[toff + i]
+            i = i - (i & -i)
+        steps = steps.at[s].add(jnp.where(mask, acc, 0))
+        i = p
+        bound = jnp.where(mask, span, -1)
+        idx = jnp.where(mask, toff + i, sink)
+        delta = jnp.where(mask, -1, 0).astype(tree.dtype)
+        for _ in range(depth):
+            tree = tree.at[idx].add(delta)
+            i = i + (i & -i)
+            idx = jnp.where(i > bound, sink, toff + i)
+        return tree, steps
+
+    _, steps = jax.lax.fori_loop(0, rounds, round_body, (tree, steps0))
+    steps_ref[0, :] = steps
+
+
+@functools.cache
+def _pallas_queue_walk(n_pad: int, r_pad: int, t_pad: int, depth: int,
+                       rounds: int):
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    def row(w):
+        return pl.BlockSpec((1, w), lambda i: (0, 0))
+
+    return pl.pallas_call(
+        functools.partial(_queue_walk_pallas_kernel, depth=depth,
+                          rounds=rounds),
+        grid=(1,),
+        in_specs=[row(t_pad), row(n_pad), row(r_pad), row(r_pad),
+                  row(r_pad), row(r_pad)],
+        out_specs=row(n_pad),
+        out_shape=jax.ShapeDtypeStruct((1, n_pad), jnp.int32),
+        interpret=jax.default_backend() == "cpu",
+    )
+
+
+def _pad_row(a, width, fill, dtype=np.int32):
+    out = np.full((1, width), fill, dtype=dtype)
+    out[0, :a.size] = a
+    return out
+
+
+def queue_walk(posted, arrival, bounds, backend: str | None = None) -> np.ndarray:
+    """Batched receive-queue walk lengths on the chosen backend.
+
+    Same contract as
+    :func:`repro.comm.primitives.batched_queue_traversal_steps` (region
+    ``r`` owns slots ``bounds[r]:bounds[r+1]`` of ``posted``/``arrival``;
+    returns per-arrival steps in the same layout).  The walk is integer
+    work, so every backend is bit-equal to the numpy reference — the device
+    paths just run all rounds in one program instead of one host-synced
+    array pass per round.  Index arithmetic runs in int32 on device
+    (arenas beyond 2^31 - 1 queue slots must use numpy).
+    """
+    if backend in (None, "auto"):
+        backend = resolve_backend("auto", n_values=_size_of(posted))
+    else:
+        backend = resolve_backend(backend)
+    if backend == "numpy":
+        from repro.comm.primitives import batched_queue_traversal_steps
+        return batched_queue_traversal_steps(posted, arrival, bounds)
+
+    tree, b, starts, counts, toff, span, depth, rounds = _queue_layout(
+        posted, arrival, bounds)
+    N = int(b.size)
+    if N == 0 or rounds == 0:
+        return np.zeros(N, dtype=np.int64)
+    if tree.size - 1 >= np.iinfo(np.int32).max:       # pragma: no cover
+        from repro.comm.primitives import batched_queue_traversal_steps
+        return batched_queue_traversal_steps(posted, arrival, bounds)
+    import jax.numpy as jnp
+    if backend == "jax":
+        walk = _jax_queue_walk(depth)
+        steps = walk(jnp.asarray(tree, jnp.int32), jnp.asarray(b, jnp.int32),
+                     jnp.asarray(starts, jnp.int32),
+                     jnp.asarray(counts, jnp.int32),
+                     jnp.asarray(toff, jnp.int32),
+                     jnp.asarray(span, jnp.int32), rounds)
+        return np.asarray(steps, dtype=np.int64)
+    # pallas: pad every row to a lane multiple; padded regions have count 0
+    # (never active) and padded chains park at the shared sink (last cell)
+    def up(n):
+        return max(_LANE, -(-n // _LANE) * _LANE)
+
+    n_pad, r_pad, t_pad = up(N), up(int(counts.size)), up(int(tree.size))
+    call = _pallas_queue_walk(n_pad, r_pad, t_pad, depth, rounds)
+    steps = call(_pad_row(tree, t_pad, 0), _pad_row(b, n_pad, 0),
+                 _pad_row(starts, r_pad, 0), _pad_row(counts, r_pad, 0),
+                 _pad_row(toff, r_pad, 0), _pad_row(span, r_pad, 0))
+    return np.asarray(steps)[0, :N].astype(np.int64)
+
+
+# -- deprecated one-hot era shims --------------------------------------------
+
+#: Deprecated: the retired one-hot kernel's work ceiling.  The fused
+#: scatter-accumulate kernel is O(messages), so no limit applies; the
+#: constant is kept (with :func:`pallas_within_limit`) so external callers
+#: written against the old reroute logic keep working.
+PALLAS_ONE_HOT_LIMIT = 1 << 24
+
+_warned_one_hot = False
+
+
+def pallas_within_limit(n_values: int, n_seg: int) -> bool:
+    """Deprecated: always True.
+
+    The one-hot Pallas kernel this guarded was replaced by the fused
+    scatter-accumulate kernel (:func:`fused_segment_reduce`), which is
+    O(messages) — there is no work ceiling and no jax reroute.  Warns once
+    per process, then delegates to the new behaviour (every size is within
+    limit).
+    """
+    global _warned_one_hot
+    if not _warned_one_hot:
+        _warned_one_hot = True
+        warnings.warn(
+            "pallas_within_limit/PALLAS_ONE_HOT_LIMIT are deprecated: the "
+            "one-hot kernel was replaced by a fused scatter-accumulate "
+            "kernel with no size limit; the pallas backend now handles "
+            "every request directly", DeprecationWarning, stacklevel=2)
+    return True

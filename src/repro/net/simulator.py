@@ -147,17 +147,18 @@ def simulate_phase(machine: MachineSpec, src, dst, size,
 
 
 def _simulate_stack(stack: PhaseStack, recv_post_orders,
-                    arrival_orders) -> list[PhaseResult]:
+                    arrival_orders, backend=None) -> list[PhaseResult]:
     """Price a stacked sweep's raw aggregates into PhaseResult rows.
 
     One segmented pass per quantity (transport sums, queue steps, link
     contention) over the whole arena — bit-identical to per-phase
-    :func:`simulate` (DESIGN.md §8)."""
+    :func:`simulate` (DESIGN.md §8) on the numpy backend; device backends
+    are allclose for the float aggregates and bit-equal for queue steps."""
     if stack.n_phases == 0:
         return []
     params = stack.machine.params
     raw = stack.sim_arrays(recv_post_orders=recv_post_orders,
-                           arrival_orders=arrival_orders)
+                           arrival_orders=arrival_orders, backend=backend)
     out = []
     for i in range(stack.n_phases):
         if stack.phases[i].n_msgs == 0:
@@ -178,7 +179,8 @@ def simulate_many(phases,
                   recv_post_orders=None,
                   arrival_orders=None,
                   rng: np.random.Generator | None = None,
-                  noise: float = 0.0) -> list[PhaseResult]:
+                  noise: float = 0.0,
+                  backend=None) -> list[PhaseResult]:
     """Simulate a sweep of :class:`CommPhase` objects (an AMG hierarchy, a
     partition or machine scan) in one call.
 
@@ -192,7 +194,11 @@ def simulate_many(phases,
     simulated in one segmented pass over the arena, bit-identical to the
     per-phase loop; single phases and mixed-machine sweeps fall back to
     :func:`simulate`.  A ``DeltaStack`` serves transport and contention from
-    its incrementally-maintained caches.
+    its incrementally-maintained caches.  ``backend`` selects the arena's
+    reduction backend (as in :meth:`repro.comm.PhaseStack.sim_arrays`;
+    ``None`` defaults to ``REPRO_STACK_BACKEND`` or numpy, ``'auto'`` is
+    the autotuned per-call choice) and is ignored on the per-phase
+    fallback path.
     """
     if noise > 0.0 and rng is None:
         rng = np.random.default_rng(0)
@@ -202,7 +208,8 @@ def simulate_many(phases,
         phases = list(phases)
         stack = as_stack(phases)
     if stack is not None:
-        out = _simulate_stack(stack, recv_post_orders, arrival_orders)
+        out = _simulate_stack(stack, recv_post_orders, arrival_orders,
+                              backend=backend)
         if noise > 0.0:
             # same draw order as the per-phase loop, which returns early for
             # empty phases without touching the rng

@@ -12,9 +12,10 @@ import numpy as np
 import pytest
 
 from repro.core import (PROTOCOL_NAMES, fit_alpha_beta, fit_delta, fit_gamma,
-                        fit_node_aware_table, fit_RN)
+                        fit_node_aware_table, fit_rails, fit_RN)
 from repro.net import (blue_waters_machine, contention_line_test,
-                       high_volume_pingpong, pingpong_sweep, ppn_sweep)
+                       frontier_machine, high_volume_pingpong,
+                       lassen_machine, pingpong_sweep, ppn_sweep)
 
 BW = blue_waters_machine((2, 2, 2))
 
@@ -90,6 +91,54 @@ def test_fit_RN_unsaturated_reports_inf():
     ks = np.arange(1.0, 9.0)
     times = 3e-6 - 1e-8 * ks          # non-positive slope: no saturation seen
     assert fit_RN(ks, times, 4096.0, 3e-6, 2.9e9) == float("inf")
+
+
+# ------------------------------------------------ n_rails -------------------
+@pytest.mark.parametrize("build, expect", [
+    (lambda: blue_waters_machine((2, 2, 2)), 1),   # single NIC: rises every k
+    (lassen_machine, 2),                           # dual-rail EDR
+    (frontier_machine, 4),                         # four-NIC Slingshot node
+], ids=["blue_waters", "lassen", "frontier"])
+def test_fit_rails_round_trip(build, expect):
+    """The per-rail byte staircase in a rendezvous-regime ppn sweep recovers
+    each preset's CommParams.n_rails: T(k) steps only when ceil(k/r)
+    increments, so the step period (or the leading plateau for one step)
+    is the rail count."""
+    machine = build()
+    assert machine.params.n_rails == expect        # the ground truth we chase
+    ks, times = ppn_sweep(machine, float(1 << 20), noise=0.0)
+    assert fit_rails(ks, times) == expect
+
+
+def test_fit_rails_unsaturated_reports_one():
+    """A flat sweep (cap never binds) is indistinguishable from one rail."""
+    ks = np.arange(1.0, 9.0)
+    assert fit_rails(ks, np.full(8, 3e-6)) == 1
+    assert fit_rails(np.array([1.0]), np.array([3e-6])) == 1
+
+
+def test_fit_rails_pairs_with_stack_rail_counters():
+    """The arena's per-rail byte counters split each phase's network bytes
+    by the same src % n_rails binding fit_rails assumes — rows sum back to
+    the phase's network bytes and move to the recovered rail count."""
+    from repro.comm import CommPhase, PhaseStack
+    machine = lassen_machine()
+    rng = np.random.default_rng(3)
+    ppn = machine.procs_per_node
+    src = np.arange(ppn)
+    dst = ppn + np.arange(ppn)                     # node 0 -> node 1: all net
+    size = rng.integers(1 << 10, 1 << 16, ppn).astype(float)
+    ph = CommPhase.build(machine, src, dst, size, n_procs=2 * ppn)
+    stack = PhaseStack.build([ph])
+    r = int(machine.params.n_rails)
+    rails = stack.rail_bytes()                     # defaults to params.n_rails
+    assert rails.shape == (1, r)
+    np.testing.assert_allclose(rails.sum(axis=1),
+                               [np.where(ph.is_net, ph.size, 0.0).sum()])
+    want = np.bincount(src % r, weights=size, minlength=r)
+    np.testing.assert_allclose(rails[0], want)
+    # a single-rail view collapses the split into the plain net-byte total
+    np.testing.assert_allclose(stack.rail_bytes(1)[:, 0], rails.sum(axis=1))
 
 
 # ------------------------------------------------ gamma ---------------------

@@ -336,3 +336,39 @@ def test_simulator_prices_staged_sequences():
             assert res.total_net_bytes == 0.0
             assert res.contention == 0.0
             assert res.transport > 0.0
+
+
+def test_device_direct_leader_queue_is_device_local():
+    """Golden pin: device_direct leaders see *device-local* in-degrees.
+
+    On Lassen (ppn=8, 4 devices x 2 ranks) a dense node0 -> node1 exchange
+    rewritten to device_direct must give the gather leader an in-degree of
+    procs_per_device - 1 = 1 (its device sibling), NOT procs_per_node - 1 = 7,
+    and the inter leader an in-degree equal to devices_per_node = 4 (one
+    coalesced message per sending device).  The queue ladder then prices the
+    leader at gamma * n^2 with that device-local n."""
+    machine = lassen_machine()
+    p = machine.params
+    ppn = machine.procs_per_node
+    ppd = machine.procs_per_device
+    ndev = machine.devices_per_node
+    rr = np.arange(ppn)
+    src = np.repeat(rr, ppn)
+    dst = ppn + np.tile(rr, ppn)                   # every node-0 rank -> node 1
+    phase = CommPhase.build(machine, src, dst,
+                            np.full(src.size, 4096.0), n_procs=2 * ppn)
+    plan = rewrite(phase, "device_direct")
+
+    gather = plan.phase_by_role("gather")
+    inter = plan.phase_by_role("inter")
+    scatter = plan.phase_by_role("scatter")
+    assert gather.max_msgs_per_proc() == ppd - 1 == 1
+    assert gather.max_msgs_per_proc() < ppn - 1     # never the node-wide fan-in
+    assert inter.max_msgs_per_proc() == ndev == 4
+    assert scatter.max_msgs_per_proc() == ppd - 1
+
+    # gamma * n^2 with the device-local n, exactly
+    assert phase_cost_phase(gather, level="queue").queue == \
+        pytest.approx(p.gamma * (ppd - 1) ** 2, rel=1e-12)
+    assert phase_cost_phase(inter, level="queue").queue == \
+        pytest.approx(p.gamma * ndev ** 2, rel=1e-12)

@@ -7,6 +7,8 @@ backend), including empty phases, single-message phases and custom receive
 orders.  The optional JAX/Pallas backends are held to allclose parity
 (they run float32).
 """
+import warnings
+
 import numpy as np
 import pytest
 
@@ -354,38 +356,32 @@ def test_stack_backends_mirror_kernels():
     assert STACK_BACKENDS == _cs.BACKENDS
 
 
-def test_pallas_one_hot_limit_uses_padded_extents():
-    n_at_limit = _cs.PALLAS_ONE_HOT_LIMIT // _cs._SEG_BLOCK
-    assert _cs.pallas_within_limit(n_at_limit, _cs._SEG_BLOCK)
-    assert not _cs.pallas_within_limit(n_at_limit + 1, _cs._SEG_BLOCK)
-    assert not _cs.pallas_within_limit(
-        _cs._CHUNK, _cs.PALLAS_ONE_HOT_LIMIT // _cs._CHUNK + 1)
-    # tiny inputs still pad up to one (chunk, segment-block) tile
-    assert _cs.pallas_within_limit(1, 1)
+def test_pallas_one_hot_shim_warns_once_and_allows_everything():
+    """The one-hot work ceiling is retired: the deprecation shim warns once
+    per process, then reports every size as within limit (the fused
+    scatter-accumulate kernel is O(messages), no reroute exists)."""
+    _cs._warned_one_hot = False
+    with pytest.warns(DeprecationWarning, match="fused scatter-accumulate"):
+        assert _cs.pallas_within_limit(1, 1)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")          # a second warning would raise
+        assert _cs.pallas_within_limit(
+            _cs.PALLAS_ONE_HOT_LIMIT, _cs.PALLAS_ONE_HOT_LIMIT)
 
 
 @needs_jax
 @pytest.mark.parametrize("op", ["sum", "max"])
-def test_pallas_oversize_falls_back_to_jax(monkeypatch, op):
-    """Above the one-hot work limit the pallas request must reroute to the
-    scalable jax segment path — the kernel itself must never launch."""
+def test_pallas_handles_sizes_beyond_retired_one_hot_limit(op):
+    """Sizes that the retired one-hot kernel had to reroute to jax now run
+    directly on the fused pallas kernel and match numpy."""
     fn = _cs.segment_sum if op == "sum" else _cs.segment_max
     rng = np.random.default_rng(0)
-    vals = rng.random(2000)
-    ids = rng.integers(0, 300, 2000)
-    want = fn(vals, ids, 300, backend="numpy")
-
-    def banned(*a, **k):
-        raise AssertionError("pallas kernel must not run above the limit")
-
-    monkeypatch.setattr(_cs, "_pallas_reduce", banned)
-    monkeypatch.setattr(_cs, "PALLAS_ONE_HOT_LIMIT", 1024)
-    got = fn(vals, ids, 300, backend="pallas")      # rerouted to jax
-    np.testing.assert_allclose(got, want, rtol=1e-5)
-    # below the limit the kernel IS selected (the ban trips)
-    monkeypatch.setattr(_cs, "PALLAS_ONE_HOT_LIMIT", 1 << 40)
-    with pytest.raises(AssertionError, match="must not run"):
-        fn(vals, ids, 300, backend="pallas")
+    n_seg = _cs.PALLAS_ONE_HOT_LIMIT // _cs._CHUNK + 1   # over the old limit
+    vals = rng.random(4 * _cs._CHUNK)
+    ids = rng.integers(0, n_seg, vals.size)
+    want = fn(vals, ids, n_seg, backend="numpy")
+    got = fn(vals, ids, n_seg, backend="pallas")
+    np.testing.assert_allclose(got, want, rtol=1e-4)
 
 
 @needs_jax
