@@ -1,0 +1,61 @@
+"""LLM workload benchmarks: derivation throughput + the stacked sweep gate.
+
+Two rows:
+
+* ``llm_derive_patterns`` — wall time to derive every registry scenario's
+  patterns from scratch (seeded routing histograms, ring lowering, pipeline
+  schedule); ``derived`` is the total message count, a quick sanity
+  fingerprint of the derivation.
+* ``llm_sweep_stacked`` — the registry's cross-machine pricing call (ONE
+  ``best_strategy_many`` over every scenario x machine candidate, stacked
+  per machine group inside) vs the per-pattern ``best_strategy`` loop over
+  the same bound phases.  Verdicts are asserted identical before timing;
+  ``derived`` is the speedup, gated >= 1.0x by ``perf_smoke`` — the single
+  arena must never lose to the loop it replaced.
+"""
+from __future__ import annotations
+
+import time
+
+
+def _best_of(fn, reps: int = 3, trials: int = 4):
+    """Best-of-N mean wall time (us) — robust against CI-runner throttling."""
+    out = fn()
+    best = float("inf")
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn()
+        best = min(best, (time.perf_counter() - t0) / reps)
+    return best * 1e6, out
+
+
+def bench_llm_workloads():
+    from repro.comm.strategies import best_strategy, best_strategy_many
+    from repro.workloads import (DEFAULT_SCENARIOS, default_machines,
+                                 scenario_patterns)
+
+    rows = []
+
+    def derive():
+        return [(sc, scenario_patterns(sc)) for sc in DEFAULT_SCENARIOS]
+
+    us_derive, derived = _best_of(derive, reps=2)
+    n_msgs = sum(pat.n_msgs for _, phases in derived for _, pat in phases)
+    rows.append(("llm_derive_patterns", us_derive, float(n_msgs)))
+
+    machines = default_machines()
+    bound = [pat.bind(m) for m in machines.values()
+             for _, phases in derived for _, pat in phases]
+
+    us_loop, ref = _best_of(lambda: [best_strategy(ph) for ph in bound],
+                            reps=2)
+    us_stack, got = _best_of(lambda: best_strategy_many(bound), reps=2)
+    assert [(v.model_winner, v.sim_winner, v.model, v.sim) for v in got] == \
+           [(v.model_winner, v.sim_winner, v.model, v.sim) for v in ref], \
+        "stacked cross-machine sweep drifted from the per-pattern loop"
+    rows.append(("llm_sweep_stacked", us_stack, us_loop / us_stack))
+    return rows
+
+
+ALL_BENCHES = [bench_llm_workloads]

@@ -27,7 +27,12 @@ regression still trips it:
   segment reduction must beat the retired one-hot matmul kernel it
   replaced (>= 1.0x; in practice it is orders of magnitude ahead).  The
   row only exists where jax is importable; a CSV without it is accepted
-  when produced on a jax-less host.
+  when produced on a jax-less host;
+* the ``llm_sweep_stacked`` row of :mod:`benchmarks.bench_llm_workloads`
+  (the registry's ONE cross-machine ``best_strategy_many`` arena vs the
+  per-pattern ``best_strategy`` loop on the same bound phases, verdicts
+  asserted identical inside the bench) — the stacked all-scenario sweep
+  must never lose to the per-scenario loop it replaced (>= 1.0x).
 
 Usage::
 
@@ -47,8 +52,10 @@ DELTA_ROWS = ("delta_local_search_64",)
 AUTO_ROWS = ("stack_auto_small", "stack_auto_large")
 #: fused-kernel-vs-retired-one-hot row: present only where jax imports
 JAX_ROWS = ("stack_jax_vs_onehot",)
+#: registry cross-machine arena vs per-scenario loop (numpy-only)
+LLM_ROWS = ("llm_sweep_stacked",)
 
-GATED_ROWS = STACK_ROWS + DELTA_ROWS + AUTO_ROWS + JAX_ROWS
+GATED_ROWS = STACK_ROWS + DELTA_ROWS + AUTO_ROWS + JAX_ROWS + LLM_ROWS
 OPTIONAL_ROWS = frozenset(JAX_ROWS)
 
 #: per-row minimum ``derived`` speedup (see the module docstring)
@@ -60,7 +67,8 @@ THRESHOLD["stack_auto_large"] = 0.9
 _REF = {**{n: ("loop", "us/sweep") for n in STACK_ROWS},
         **{n: ("rebuild", "us/search") for n in DELTA_ROWS},
         **{n: ("numpy", "us/eval") for n in AUTO_ROWS},
-        **{n: ("one-hot", "us/reduce") for n in JAX_ROWS}}
+        **{n: ("one-hot", "us/reduce") for n in JAX_ROWS},
+        **{n: ("loop", "us/sweep") for n in LLM_ROWS}}
 
 
 def _rows_from_csv(path: str):
@@ -83,9 +91,11 @@ def main() -> None:
     else:
         from .bench_delta import bench_delta_local_search
         from .bench_kernels import bench_phase_stack
+        from .bench_llm_workloads import bench_llm_workloads
         from .bench_stack_backends import bench_stack_backends
         rows = (bench_phase_stack() + bench_delta_local_search()
-                + [r for r in bench_stack_backends() if r[0] in GATED_ROWS])
+                + [r for r in bench_stack_backends() if r[0] in GATED_ROWS]
+                + [r for r in bench_llm_workloads() if r[0] in GATED_ROWS])
     failed = False
     for name, us, speedup in rows:
         ref, unit = _REF[name]

@@ -1,0 +1,61 @@
+"""Price the repo's own LLM traffic with the paper's comm model, end to end.
+
+The model stack (``repro.nn`` + ``repro.parallel``) *generates* irregular
+point-to-point communication; the comm stack (``repro.comm`` +
+``repro.core``) *prices* it.  This example connects them through
+``repro.workloads``:
+
+1. Derive real traffic shapes, numpy-only: the MoE expert-parallel
+   all-to-all of qwen3-moe / deepseek-moe (seeded token-routing histograms
+   lowered to the ``ep_a2a`` two-exchange schedule, capacity clipping
+   included), llama3's TP ring collectives, and a GPipe stage-boundary
+   exchange.
+2. Sweep every scenario on every machine preset (lassen / frontier GPU
+   nodes + the paper's Blue Waters CPU baseline) through ONE
+   ``best_strategy_many`` arena.
+3. Print the winner table: which node-aware / GPU-aware strategy the model
+   predicts per phase, and whether the simulator's verdict agrees (it
+   should — ``tests/test_workloads_golden.py`` pins this exact table).
+
+    PYTHONPATH=src python examples/comm_model_llm.py
+"""
+import numpy as np
+
+from repro.configs import get_config
+from repro.workloads import (DEFAULT_SCENARIOS, moe_a2a_pattern, sweep,
+                             winner_table)
+
+
+def main():
+    # -- the raw shapes: what one MoE layer actually puts on the wire -------
+    cfg = get_config("qwen3-moe-30b-a3b")
+    pat = moe_a2a_pattern(cfg, n_ranks=64, tokens_per_rank=256, seed=0)
+    pair = pat.dispatch.size
+    print(f"{cfg.name}: 64 ranks x 256 tokens, E={cfg.n_experts} "
+          f"top-{cfg.n_experts_active}, capacity {pat.capacity}/expert "
+          f"-> {pat.dispatch.n_msgs} dispatch messages, "
+          f"{pat.dispatch.total_bytes / 1e6:.1f} MB")
+    print(f"per-pair size spread: {pair.min() / 1e3:.1f} KB .. "
+          f"{pair.max() / 1e3:.1f} KB (median {np.median(pair) / 1e3:.1f} KB)"
+          f" — irregular, not a collective schedule; "
+          f"{pat.dropped_tokens} assignments clipped at capacity\n")
+
+    # -- the sweep: every scenario x machine in one arena -------------------
+    rows = sweep(DEFAULT_SCENARIOS)
+    print(winner_table(rows))
+
+    agree = sum(r.agree for r in rows)
+    print(f"\nModel predicts the simulator's winner in {agree}/{len(rows)} "
+          "cells.")
+    print("Reading: on lassen (dual-rail host NICs) the dense MoE "
+          "all-to-alls stage through\nhost memory (host_staged) and the "
+          "bulk TP/pipeline volume aggregates (three_step);\non frontier "
+          "(GPU-side NICs) and the CPU baseline the minimal-message shapes "
+          "keep\nthe standard strategy, with combine-side aggregation "
+          "winning where the reversed\nhistogram concentrates traffic.  "
+          "This is the paper's thesis on the repo's own\ntraffic: strategy "
+          "choice is machine x shape, and the model predicts it.")
+
+
+if __name__ == "__main__":
+    main()

@@ -431,6 +431,18 @@ def best_strategy(pattern, machine=None, *, strategies=None,
                               params=params)[0]
 
 
+def _machine_groups(phases) -> list[list[int]]:
+    """Partition ``phases`` indices by machine identity, first-seen order.
+
+    Each group's phases share one machine, so each can stack into its own
+    arena; the groups together cover every index exactly once.
+    """
+    groups: dict[int, list[int]] = {}
+    for i, ph in enumerate(phases):
+        groups.setdefault(id(ph.machine), []).append(i)
+    return list(groups.values())
+
+
 def best_strategy_many(patterns, machine=None, *, strategies=None,
                        level: str = "contention", arrival: str = "random",
                        seed: int = 0, params=None) -> list[StrategyVerdict]:
@@ -442,10 +454,13 @@ def best_strategy_many(patterns, machine=None, *, strategies=None,
     concatenated into a single :class:`~repro.comm.PhaseStack`, then the
     model ladder and the simulator each price the entire candidate set in
     one segmented pass — the strategy-sweep analogue of
-    :func:`repro.core.models.phase_cost_many`.  Results are element-wise
-    identical to ``[best_strategy(p, ...) for p in patterns]`` (each
-    candidate keeps its own seeded arrival stream); only the number of
-    arena walks changes.
+    :func:`repro.core.models.phase_cost_many`.  Already-bound phases from
+    *different* machines (a cross-machine scenario sweep, e.g.
+    :func:`repro.workloads.sweep`) are also one arena call: the candidate
+    set is partitioned by machine and stacked per machine group.  Results
+    are element-wise identical to ``[best_strategy(p, ...) for p in
+    patterns]`` (each candidate keeps its own seeded arrival stream); only
+    the number of arena walks changes.
     """
     if arrival not in ("random", "posted"):
         raise ValueError(f"unknown arrival regime {arrival!r}; "
@@ -483,14 +498,29 @@ def best_strategy_many(patterns, machine=None, *, strategies=None,
                                 else [None] * plan.n_phases)
         plan_rows.append(plans)
         spans.append(row_spans)
-    # one shared arena for both passes; mixed-machine candidate sets (bound
-    # phases from different machines) fall back to the per-phase loop, same
-    # policy as every batched entry point
+    # one shared arena for both passes; a mixed-machine candidate set (bound
+    # phases from different machines — a cross-machine scenario sweep) is
+    # partitioned by machine and runs one arena per machine group, results
+    # scattered back in place (bit-identical to one arena by the PhaseStack
+    # contract: segmented passes never mix rows across phases)
     stack = as_stack(all_phases)
-    if stack is None:
-        stack = all_phases
-    costs = phase_cost_many(stack, level=level, params=params)
-    sims = simulate_many(stack, arrival_orders=all_arrivals)
+    if stack is not None:
+        costs = phase_cost_many(stack, level=level, params=params)
+        sims = simulate_many(stack, arrival_orders=all_arrivals)
+    else:
+        costs = [None] * len(all_phases)
+        sims = [None] * len(all_phases)
+        for idx in _machine_groups(all_phases):
+            sub = [all_phases[i] for i in idx]
+            sub_stack = as_stack(sub)
+            if sub_stack is None:       # single phase / degenerate group
+                sub_stack = sub
+            sub_costs = phase_cost_many(sub_stack, level=level, params=params)
+            sub_sims = simulate_many(
+                sub_stack, arrival_orders=[all_arrivals[i] for i in idx])
+            for i, c, r in zip(idx, sub_costs, sub_sims):
+                costs[i] = c
+                sims[i] = r
     out = []
     for plans, row_spans in zip(plan_rows, spans):
         model = {name: sum(c.total for c in costs[row_spans[name]])

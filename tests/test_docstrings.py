@@ -26,9 +26,15 @@ import repro.comm.primitives
 import repro.comm.stack
 import repro.comm.strategies
 import repro.net.machine
+import repro.workloads.moe
+import repro.workloads.pipe
+import repro.workloads.registry
+import repro.workloads.tp
 
 MODULES = [repro.comm.phase, repro.comm.primitives, repro.comm.stack,
-           repro.comm.delta, repro.comm.strategies, repro.net.machine]
+           repro.comm.delta, repro.comm.strategies, repro.net.machine,
+           repro.workloads.moe, repro.workloads.tp, repro.workloads.pipe,
+           repro.workloads.registry]
 
 #: Parameter names that need no mention: conventions, not API.
 IGNORED_PARAMS = {"self", "cls", "args", "kwargs", "kw"}
