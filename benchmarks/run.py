@@ -8,11 +8,11 @@ import traceback
 
 def main() -> None:
     from . import (bench_paper, bench_kernels, bench_roofline, bench_delta,
-                   bench_stack_backends, bench_llm_workloads)
+                   bench_stack_backends, bench_llm_workloads, bench_faults)
     print("name,us_per_call,derived")
     failures = 0
     for mod in (bench_paper, bench_kernels, bench_roofline, bench_delta,
-                bench_stack_backends, bench_llm_workloads):
+                bench_stack_backends, bench_llm_workloads, bench_faults):
         for bench in mod.ALL_BENCHES:
             try:
                 for (name, us, derived) in bench():

@@ -28,9 +28,22 @@ O(changed) cost — bit-identical to a fresh build — so model-guided local
 search (:func:`repro.sparse.optimize_partition`) pays per move only for
 what the move touched.
 
+The robustness layer (DESIGN.md §12) rides underneath all of it:
+:mod:`repro.comm.guard` is the typed input-validation layer (the
+:class:`PatternError` hierarchy), :mod:`repro.comm.faults` the
+deterministic fault-injection framework over every device-backend site,
+and :mod:`repro.comm.health` the per-process :class:`BackendHealth`
+ledger (degradation events, quarantine, the resettable warn-once
+registry) that the graceful-fallback policy reports to.
+
 See ``docs/api.md`` for the public API reference and DESIGN.md §1/§7/§8/§9
 for the architecture.
 """
+from .guard import (PatternError, MessageSizeError, RankError,
+                    ArenaOverflowError, validate_messages, validate_phase)
+from .faults import (FaultSpec, InjectedFault, InjectedTimeout, inject,
+                     SITES as FAULT_SITES, MODES as FAULT_MODES)
+from .health import BackendHealth, HealthEvent, get_health, reset_health
 from .phase import CommPhase
 from .primitives import (active_senders_per_node, transport_times,
                          per_proc_sums, group_by_receiver, sum_by_pairs,
@@ -59,4 +72,9 @@ __all__ = [
     "rewrite",
     "injected_payload", "delivered_payload", "best_strategy",
     "best_strategy_many",
+    "PatternError", "MessageSizeError", "RankError", "ArenaOverflowError",
+    "validate_messages", "validate_phase",
+    "FaultSpec", "InjectedFault", "InjectedTimeout", "inject",
+    "FAULT_SITES", "FAULT_MODES",
+    "BackendHealth", "HealthEvent", "get_health", "reset_health",
 ]

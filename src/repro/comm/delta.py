@@ -324,16 +324,18 @@ def _mutate_state(st: _PhaseState, rm_local: np.ndarray,
     n_old = ph.n_msgs
 
     if add is not None:
+        # typed validation (PatternError is a ValueError, so existing
+        # callers catching ValueError keep working): rejects length
+        # mismatches, NaN/negative sizes and endpoints outside the phase's
+        # fixed process count before any cached aggregate is touched
+        from .guard import validate_messages
+        validate_messages(np.asarray(add[0]).ravel(),
+                          np.asarray(add[1]).ravel(),
+                          np.asarray(add[2]).ravel(), n_procs=P,
+                          where="DeltaStack.apply(added)")
         src_a = np.asarray(add[0], dtype=np.int64).ravel()
         dst_a = np.asarray(add[1], dtype=np.int64).ravel()
         size_a = np.asarray(add[2], dtype=np.float64).ravel()
-        if not (src_a.size == dst_a.size == size_a.size):
-            raise ValueError("added src/dst/size arrays must match in length")
-        if src_a.size and (src_a.min() < 0 or dst_a.min() < 0
-                           or max(src_a.max(), dst_a.max()) >= P):
-            raise ValueError(
-                f"added message endpoints must lie in [0, {P}) — the phase's "
-                "process count is fixed at build time")
     else:
         src_a = dst_a = np.zeros(0, dtype=np.int64)
         size_a = np.zeros(0)

@@ -1,0 +1,250 @@
+"""Deterministic fault injection for the comm stack's device/backend sites.
+
+Every device-backend call in the pricing stack passes through a **named
+injection site**: the fused segment reduction and queue walk in
+:mod:`repro.kernels.comm_stack`, the device column shipping in
+:meth:`repro.comm.PhaseStack._dev`, and the autotune live probe and disk
+cache.  This module arms those sites: an armed site can *raise*, *time out*,
+*NaN-poison* its output, or *corrupt* it — deterministically (no randomness,
+an optional fire-count), so a CI chaos run reproduces exactly.
+
+Sites (:data:`SITES`):
+
+==========================  =================================================
+``kernel.segment_reduce``   jitted/Pallas segment sum/max reductions
+``kernel.queue_walk``       the device Fenwick queue sweep
+``stack.device_store``      arena column shipping to the device
+``autotune.probe``          the live numpy/jax crossover probe
+``autotune.cache_read``     autotune disk-cache read
+``autotune.cache_write``    autotune disk-cache write
+==========================  =================================================
+
+Modes (:data:`MODES`): ``raise`` (an :class:`InjectedFault`), ``timeout``
+(an :class:`InjectedTimeout`, an ``OSError``/``TimeoutError`` so cache and
+probe paths see a realistic failure type), ``nan`` (float outputs filled
+with NaN — pair with ``REPRO_STACK_VERIFY=finite`` to detect it), and
+``corrupt`` (numeric outputs shifted off their true values, strings/bytes
+garbled — pair with ``REPRO_STACK_VERIFY=parity``).
+
+Arming a site, two equivalent ways:
+
+* the :func:`inject` context manager (tests)::
+
+      with inject("kernel.segment_reduce", "raise"):
+          ...  # every fused reduction degrades to numpy inside the block
+
+* the ``REPRO_FAULT_INJECT`` env var (CI chaos runs): a comma-separated
+  list of ``site:mode`` or ``site:mode:times`` entries, where ``site`` may
+  be a glob (``kernel.*:raise,autotune.probe:timeout:1``).
+
+Instrumented code calls :func:`fail_point` (raises for armed raise/timeout
+specs) and :func:`poison` (transforms outputs for armed nan/corrupt specs);
+both are no-ops when nothing matches, so the instrumentation costs one dict
+probe per *device call* (never per message).  The graceful-degradation
+wrappers around each site catch what fires, record it in
+:class:`repro.comm.health.BackendHealth`, and fall back to the numpy
+reference — see DESIGN.md §12.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import fnmatch
+import os
+
+import numpy as np
+
+__all__ = ["SITES", "MODES", "FaultSpec", "InjectedFault", "InjectedTimeout",
+           "inject", "fail_point", "poison", "active_specs", "any_armed",
+           "ENV_VAR"]
+
+#: Named injection sites wrapping every device-backend call.
+SITES = (
+    "kernel.segment_reduce",
+    "kernel.queue_walk",
+    "stack.device_store",
+    "autotune.probe",
+    "autotune.cache_read",
+    "autotune.cache_write",
+)
+
+#: Injection modes: raise / timeout fire at :func:`fail_point`, nan /
+#: corrupt transform outputs at :func:`poison`.
+MODES = ("raise", "timeout", "nan", "corrupt")
+
+#: Env var holding the process-wide fault plan (CI chaos runs):
+#: ``site:mode[:times]`` entries, comma-separated; ``site`` may be a glob.
+ENV_VAR = "REPRO_FAULT_INJECT"
+
+
+class InjectedFault(RuntimeError):
+    """A deterministic injected backend failure (mode ``raise``)."""
+
+
+class InjectedTimeout(InjectedFault, TimeoutError):
+    """An injected timeout (mode ``timeout``).
+
+    Also a ``TimeoutError`` (hence ``OSError``), so the disk-cache and
+    probe paths — which guard against real I/O failures — see the same
+    exception family a genuine timeout would produce.
+    """
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """One armed fault: ``mode`` at every site matching ``site``.
+
+    ``site`` is an exact name or an ``fnmatch`` glob; ``times`` caps how
+    often the spec fires (None = every time); ``fired`` counts firings —
+    the :func:`inject` context manager yields the spec so tests can assert
+    exactly how many times the fault triggered.
+    """
+
+    site: str
+    mode: str
+    times: int | None = None
+    fired: int = 0
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"unknown fault mode {self.mode!r}; "
+                             f"expected one of {MODES}")
+        if self.times is not None and self.times < 1:
+            raise ValueError(f"times must be >= 1, got {self.times}")
+
+    def matches(self, site: str) -> bool:
+        """Whether this spec covers ``site`` (exact or glob match)."""
+        return self.site == site or fnmatch.fnmatchcase(site, self.site)
+
+    @property
+    def armed(self) -> bool:
+        """Whether the spec can still fire (``times`` not exhausted)."""
+        return self.times is None or self.fired < self.times
+
+    def fire(self) -> None:
+        """Count one firing."""
+        self.fired += 1
+
+
+# context-manager-armed specs, innermost last (fires before env specs)
+_stack: list[FaultSpec] = []
+# parsed env plans, keyed by the raw env string (the env can change
+# between calls — monkeypatched tests — so the parse is keyed, not frozen)
+_env_cache: dict[str, tuple[FaultSpec, ...]] = {}
+
+
+def _parse_env(raw: str) -> tuple[FaultSpec, ...]:
+    specs = []
+    for entry in raw.split(","):
+        entry = entry.strip()
+        if not entry:
+            continue
+        parts = entry.split(":")
+        if len(parts) not in (2, 3):
+            raise ValueError(
+                f"bad {ENV_VAR} entry {entry!r}; expected site:mode or "
+                "site:mode:times")
+        times = int(parts[2]) if len(parts) == 3 else None
+        specs.append(FaultSpec(site=parts[0], mode=parts[1], times=times))
+    return tuple(specs)
+
+
+def _env_specs() -> tuple[FaultSpec, ...]:
+    raw = os.environ.get(ENV_VAR, "")
+    if not raw:
+        return ()
+    if raw not in _env_cache:
+        _env_cache.clear()                    # one plan per process at a time
+        _env_cache[raw] = _parse_env(raw)
+    return _env_cache[raw]
+
+
+def active_specs() -> tuple[FaultSpec, ...]:
+    """Every armed spec, innermost context first, then the env plan."""
+    return tuple(s for s in (*reversed(_stack), *_env_specs()) if s.armed)
+
+
+def any_armed() -> bool:
+    """Whether any fault spec is currently armed (context or env)."""
+    return bool(active_specs())
+
+
+def _match(site: str, modes: tuple[str, ...]) -> FaultSpec | None:
+    for spec in active_specs():
+        if spec.mode in modes and spec.matches(site):
+            return spec
+    return None
+
+
+@contextlib.contextmanager
+def inject(site: str, mode: str = "raise", times: int | None = None):
+    """Arm ``mode`` at every site matching ``site`` for the block.
+
+    ``site`` is an exact name from :data:`SITES` or an ``fnmatch`` glob;
+    ``times`` caps how often the spec fires (None = every time).  Yields
+    the armed :class:`FaultSpec` (inspect ``spec.fired`` afterwards).
+    Nested injections stack; the innermost matching spec fires first.
+    """
+    spec = FaultSpec(site=site, mode=mode, times=times)
+    _stack.append(spec)
+    try:
+        yield spec
+    finally:
+        _stack.remove(spec)
+
+
+def fail_point(site: str) -> None:
+    """The raise/timeout trigger, called on entry to an instrumented site.
+
+    Raises :class:`InjectedFault` / :class:`InjectedTimeout` when an armed
+    ``raise`` / ``timeout`` spec matches ``site``; otherwise a no-op.
+    """
+    spec = _match(site, ("raise", "timeout"))
+    if spec is None:
+        return
+    spec.fire()
+    if spec.mode == "timeout":
+        raise InjectedTimeout(f"injected timeout at {site}")
+    raise InjectedFault(f"injected failure at {site}")
+
+
+def _poison_value(value, mode: str):
+    if isinstance(value, tuple):
+        return tuple(_poison_value(v, mode) for v in value)
+    if isinstance(value, (str, bytes)):
+        junk = "\x00corrupt\x00" if isinstance(value, str) else b"\x00corrupt\x00"
+        return junk + value
+    arr = np.asarray(value)
+    if mode == "nan":
+        if np.issubdtype(arr.dtype, np.floating):
+            return np.full_like(arr, np.nan)
+        # integer outputs cannot hold NaN, and shifting them instead would
+        # make nan-mode undetectable by REPRO_STACK_VERIFY=finite (which
+        # only inspects float leaves): nan leaves non-float outputs intact,
+        # corrupt is the integer-corruption mode
+        return value
+    # corrupt: shift every element detectably off its true value — a
+    # relative bump for floats (the parity check is allclose-based, so an
+    # absolute +1 would vanish against large magnitudes) and +1 for
+    # integers (parity compares integer outputs exactly)
+    if np.issubdtype(arr.dtype, np.floating):
+        return arr * 1.01 + 1.0
+    return arr + np.ones_like(arr)
+
+
+def poison(site: str, value):
+    """The output-poisoning trigger, called on an instrumented site's result.
+
+    When an armed ``nan`` / ``corrupt`` spec matches ``site``, returns a
+    poisoned copy of ``value`` (tuples poison element-wise; float arrays are
+    NaN-filled under ``nan``, which leaves integer outputs intact — only
+    ``finite``-detectable damage; ``corrupt`` shifts numeric outputs off
+    their true values and garbles strings/bytes).  Otherwise returns
+    ``value`` unchanged.  Poisoned *device* outputs are what the
+    ``REPRO_STACK_VERIFY`` post-kernel checks exist to catch.
+    """
+    spec = _match(site, ("nan", "corrupt"))
+    if spec is None:
+        return value
+    spec.fire()
+    return _poison_value(value, spec.mode)

@@ -1,0 +1,207 @@
+"""Backend health accounting: degradation events, quarantine, warn-once.
+
+The comm stack degrades gracefully: when a device backend (jax / Pallas)
+fails — an injected fault, a compile error, an int32-overflow arena, a
+verify-mode mismatch — the failing call falls back to the numpy bit-identity
+reference and *records the event here* instead of crashing the sweep.  This
+module is the per-process ledger of those events:
+
+* :class:`BackendHealth` keeps an append-only event list, per-backend
+  consecutive-failure streaks, and a quarantine set: a backend that fails
+  ``quarantine_after`` times in a row is quarantined — subsequent requests
+  for it resolve straight to numpy without re-attempting the device path —
+  until :meth:`BackendHealth.reset` (or a recorded success, which clears the
+  streak but not an existing quarantine).
+* The same object owns the process's **resettable warn-once registry**
+  (:meth:`BackendHealth.warn_once`): every "warn once per process" message
+  in the stack (backend fallbacks, the deprecated one-hot shim) goes through
+  it, so tests can reset warning state instead of poking module globals.
+
+One process-wide instance is served by :func:`get_health`;
+:func:`reset_health` restores it to a clean slate (the autouse pytest
+fixture in ``tests/conftest.py`` does this around every test).
+
+Layering: stdlib-only (no numpy, no jax), importable from everywhere —
+:mod:`repro.kernels.comm_stack` and :mod:`repro.comm.stack` both report
+here.  See DESIGN.md §12 for the failure-handling contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import os
+import threading
+import warnings
+
+__all__ = ["HealthEvent", "BackendHealth", "get_health", "reset_health",
+           "DEFAULT_QUARANTINE_AFTER"]
+
+#: Consecutive failures of one backend before it is quarantined (override
+#: per process with the ``REPRO_STACK_QUARANTINE`` env var; ``0`` disables
+#: quarantine entirely — every call re-attempts the device path).
+DEFAULT_QUARANTINE_AFTER = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthEvent:
+    """One recorded degradation: ``backend`` failed at injection ``site``.
+
+    ``error`` is the triggering exception's ``repr`` (the exception object
+    itself is not retained — events outlive their tracebacks); ``seq`` is a
+    process-wide monotone sequence number, so event ordering is total even
+    across interleaved arenas.
+    """
+
+    seq: int
+    backend: str
+    site: str
+    error: str
+
+    def __str__(self) -> str:
+        return f"[{self.seq}] {self.backend} failed at {self.site}: {self.error}"
+
+
+class BackendHealth:
+    """Per-process backend failure ledger + quarantine + warn-once registry.
+
+    Thread-safe (one lock around all mutation).  ``quarantine_after=None``
+    reads the ``REPRO_STACK_QUARANTINE`` env var (default
+    :data:`DEFAULT_QUARANTINE_AFTER`); ``0`` disables quarantine.
+    """
+
+    def __init__(self, quarantine_after: int | None = None):
+        if quarantine_after is None:
+            quarantine_after = int(os.environ.get(
+                "REPRO_STACK_QUARANTINE", DEFAULT_QUARANTINE_AFTER))
+        if quarantine_after < 0:
+            raise ValueError(
+                f"quarantine_after must be >= 0, got {quarantine_after}")
+        self.quarantine_after = quarantine_after
+        self._lock = threading.Lock()
+        self._seq = itertools.count()
+        self._events: list[HealthEvent] = []
+        self._streak: dict[str, int] = {}
+        self._quarantined: set[str] = set()
+        self._warned: set[str] = set()
+
+    # -- event accounting ----------------------------------------------------
+    def record_failure(self, backend: str, site: str,
+                       error: BaseException | str) -> HealthEvent:
+        """Record one backend failure at a named injection ``site``.
+
+        ``error`` is the triggering exception (or a plain string), kept as
+        its ``repr`` on the event.  Bumps ``backend``'s
+        consecutive-failure streak and quarantines it
+        when the streak reaches ``quarantine_after``; warns once per
+        (backend, site) pair so a million-message sweep degrades with one
+        line of noise, not one per call.  Returns the recorded event.
+        """
+        err = error if isinstance(error, str) else repr(error)
+        with self._lock:
+            ev = HealthEvent(seq=next(self._seq), backend=backend, site=site,
+                             error=err)
+            self._events.append(ev)
+            streak = self._streak.get(backend, 0) + 1
+            self._streak[backend] = streak
+            newly_quarantined = (self.quarantine_after
+                                 and streak >= self.quarantine_after
+                                 and backend not in self._quarantined)
+            if newly_quarantined:
+                self._quarantined.add(backend)
+        self.warn_once(
+            f"fallback:{backend}:{site}",
+            f"backend {backend!r} failed at {site} ({err}); falling back to "
+            "the numpy reference for this and further failures at this site")
+        if newly_quarantined:
+            self.warn_once(
+                f"quarantine:{backend}",
+                f"backend {backend!r} quarantined after {streak} consecutive "
+                "failures; requests resolve to numpy until "
+                "BackendHealth.reset()")
+        return ev
+
+    def record_success(self, backend: str) -> None:
+        """Record a successful device call: clears ``backend``'s
+        consecutive-failure streak (an existing quarantine stays until
+        :meth:`reset` — a quarantined backend is not re-attempted, so a
+        success can only come from an explicit direct call)."""
+        with self._lock:
+            self._streak[backend] = 0
+
+    def is_quarantined(self, backend: str) -> bool:
+        """Whether ``backend`` is quarantined (resolve it to numpy)."""
+        with self._lock:
+            return backend in self._quarantined
+
+    # -- inspection ----------------------------------------------------------
+    @property
+    def events(self) -> tuple[HealthEvent, ...]:
+        """Every recorded degradation event, in sequence order."""
+        with self._lock:
+            return tuple(self._events)
+
+    @property
+    def n_events(self) -> int:
+        """Number of recorded events (cheap degradation probe: snapshot it
+        before a call, compare after)."""
+        with self._lock:
+            return len(self._events)
+
+    def failure_streak(self, backend: str) -> int:
+        """Current consecutive-failure count for ``backend``."""
+        with self._lock:
+            return self._streak.get(backend, 0)
+
+    def events_for(self, backend: str | None = None,
+                   site: str | None = None) -> tuple[HealthEvent, ...]:
+        """Events filtered by ``backend`` and/or ``site`` (None = any)."""
+        with self._lock:
+            return tuple(ev for ev in self._events
+                         if (backend is None or ev.backend == backend)
+                         and (site is None or ev.site == site))
+
+    # -- warn-once registry --------------------------------------------------
+    def warn_once(self, key: str, message: str,
+                  category: type[Warning] = RuntimeWarning,
+                  stacklevel: int = 3) -> bool:
+        """Issue ``message`` as a warning the first time ``key`` is seen.
+
+        The resettable replacement for module-level ``_warned_*`` globals:
+        ``category`` and ``stacklevel`` pass through to ``warnings.warn``;
+        returns True when the warning was actually issued.  :meth:`reset`
+        clears the seen-set (the pytest autouse fixture relies on this to
+        stop warn-once state leaking across tests).
+        """
+        with self._lock:
+            if key in self._warned:
+                return False
+            self._warned.add(key)
+        warnings.warn(message, category, stacklevel=stacklevel)
+        return True
+
+    def warned(self, key: str) -> bool:
+        """Whether warn-once ``key`` has fired since the last reset."""
+        with self._lock:
+            return key in self._warned
+
+    # -- lifecycle -----------------------------------------------------------
+    def reset(self) -> None:
+        """Clear events, streaks, quarantines and warn-once state."""
+        with self._lock:
+            self._events.clear()
+            self._streak.clear()
+            self._quarantined.clear()
+            self._warned.clear()
+
+
+_health = BackendHealth()
+
+
+def get_health() -> BackendHealth:
+    """The process-wide :class:`BackendHealth` ledger."""
+    return _health
+
+
+def reset_health() -> None:
+    """Reset the process-wide ledger (events, quarantines, warn-once)."""
+    _health.reset()

@@ -46,7 +46,7 @@ class CommPhase:
 
     @classmethod
     def build(cls, machine, src, dst, size, n_procs: int | None = None,
-              loc=None) -> "CommPhase":
+              loc=None, validate: bool = False) -> "CommPhase":
         """Bind a message set ``(src, dst, size)`` to ``machine``.
 
         Computes every derived per-message array (locality, protocol,
@@ -59,7 +59,21 @@ class CommPhase:
         a *routing decision*, not a pair geometry; everything downstream
         (protocol, ``is_net``, injection accounting, pricing) follows the
         override.
+
+        ``validate=True`` runs the typed input-validation layer
+        (:func:`repro.comm.guard.validate_messages`) first: NaN / negative
+        sizes, out-of-range or non-integral ranks, and int32-overflow
+        arenas raise a precise :class:`repro.comm.guard.PatternError`
+        subclass before any derived array is computed.
         """
+        if validate:
+            from .guard import validate_messages
+            # validate the raveled raw inputs: the int64/float64 casts below
+            # would silently truncate NaN ranks and mask length mismatches
+            validate_messages(np.asarray(src).ravel(),
+                              np.asarray(dst).ravel(),
+                              np.asarray(size).ravel(), n_procs=n_procs,
+                              where="CommPhase.build")
         src = np.asarray(src, dtype=np.int64).ravel()
         dst = np.asarray(dst, dtype=np.int64).ravel()
         size = np.asarray(size, dtype=np.float64).ravel()

@@ -59,6 +59,9 @@ from typing import Any
 
 import numpy as np
 
+from . import faults
+from .guard import ArenaOverflowError
+from .health import get_health
 from .phase import CommPhase
 from .primitives import (flat_orders, group_by_receiver,
                          grouped_queue_steps, transport_times)
@@ -421,18 +424,26 @@ class PhaseStack:
     def _dev(self, name):
         """The named per-message column as a cached device array (float64
         columns go over as float32, int64 keys as int32 — the device
-        contract is allclose/float32 for floats and exact for keys)."""
+        contract is allclose/float32 for floats and exact for keys).
+
+        An arena whose keys exceed int32 raises the typed
+        :class:`repro.comm.guard.ArenaOverflowError` — callers inside the
+        degradation contract (:meth:`cost_arrays` / :meth:`sim_arrays`)
+        catch it and price the arena on the numpy path with a warn-once
+        instead of crashing the sweep.
+        """
         store = self._device_store
         if name not in store:
             import jax.numpy as jnp
+            faults.fail_point("stack.device_store")
             a = np.asarray(getattr(self, name))
             if a.dtype == np.float64:
                 a = a.astype(np.float32)
             elif a.dtype == np.int64:
                 if a.size and (a.max() >= 2 ** 31 or a.min() < -2 ** 31):
-                    raise ValueError(
-                        f"arena column {name!r} exceeds int32 range; use "
-                        "backend='numpy' for sweeps this large")
+                    raise ArenaOverflowError(
+                        f"arena column {name!r} exceeds int32 range; such "
+                        "arenas price on the numpy backend")
                 a = a.astype(np.int32)
             store[name] = jnp.asarray(a)
         return store[name]
@@ -497,43 +508,19 @@ class PhaseStack:
                 # ground-truth node-aware pricing: the pass shared with the
                 # simulator (identical inputs, identical result)
                 dense = self._machine_transport
-            elif mod is not None:
+            else:
                 # device path: columns cached resident, tables indexed and
                 # the formula priced on device, one transfer of the reduced
-                # dense matrix back
-                dense = self._device_cost_dense(p, node_aware, use_maxrate,
-                                                backend_name, mod, same_net)
-            else:
-                # protocol classes depend on size thresholds only: the
-                # machine-table classification is already cached
-                proto = self.proto if p is m.params else p.protocol_of(
-                    self.size)
-                if node_aware:
-                    if p is m.params:
-                        alpha, Rb, RN = self._machine_tables
-                    else:
-                        alpha = p.alpha[self.loc, proto]
-                        Rb = p.Rb[self.loc, proto]
-                        RN = p.RN[self.loc, proto] if use_maxrate else None
-                    is_net = (self.is_net if same_net
-                              else self.loc >= p.network_locality)
-                else:
-                    # loc collapses to the network class: index the table
-                    # rows by protocol only (== full_like(loc, nl) indexing)
-                    nl = p.network_locality
-                    alpha = p.alpha[nl][proto]
-                    Rb = p.Rb[nl][proto]
-                    RN = p.RN[nl][proto] if use_maxrate else None
-                    is_net = np.ones(self.total_msgs, dtype=bool)
-                if use_maxrate:
-                    t_msg = transport_times(self.size, alpha, Rb, RN,
-                                            self._active_ppn_for(p), is_net,
-                                            rails=p.n_rails)
-                else:
-                    t_msg = transport_times(self.size, alpha, Rb, None, 1.0,
-                                            False, use_maxrate=False)
-                dense = self._phase_proc_sums(t_msg, self._src_key,
-                                              backend="numpy")
+                # dense matrix back.  A device failure (None) degrades to
+                # the numpy pricing path — the sweep never crashes on a
+                # backend fault (DESIGN.md §12).
+                dense = (self._device_dense_guarded(
+                             p, node_aware, use_maxrate, backend_name, mod,
+                             same_net)
+                         if mod is not None else None)
+                if dense is None:
+                    dense = self._numpy_dense_for(p, node_aware, use_maxrate,
+                                                  same_net)
             if cacheable:
                 self._ladder_cache[flags] = dense
         transport = dense.max(axis=1)
@@ -561,6 +548,84 @@ class PhaseStack:
         return active_senders_per_node(
             self.src, self.phase_id * node_span + self.send_node,
             self.loc >= params.network_locality)
+
+    def _numpy_cost_dense(self, p, node_aware, use_maxrate,
+                          same_net) -> np.ndarray:
+        """The ladder transport matrix priced on the host — the bit-identity
+        numpy reference the device path degrades to."""
+        m = self.machine
+        # protocol classes depend on size thresholds only: the
+        # machine-table classification is already cached
+        proto = self.proto if p is m.params else p.protocol_of(self.size)
+        if node_aware:
+            if p is m.params:
+                alpha, Rb, RN = self._machine_tables
+            else:
+                alpha = p.alpha[self.loc, proto]
+                Rb = p.Rb[self.loc, proto]
+                RN = p.RN[self.loc, proto] if use_maxrate else None
+            is_net = (self.is_net if same_net
+                      else self.loc >= p.network_locality)
+        else:
+            # loc collapses to the network class: index the table
+            # rows by protocol only (== full_like(loc, nl) indexing)
+            nl = p.network_locality
+            alpha = p.alpha[nl][proto]
+            Rb = p.Rb[nl][proto]
+            RN = p.RN[nl][proto] if use_maxrate else None
+            is_net = np.ones(self.total_msgs, dtype=bool)
+        if use_maxrate:
+            t_msg = transport_times(self.size, alpha, Rb, RN,
+                                    self._active_ppn_for(p), is_net,
+                                    rails=p.n_rails)
+        else:
+            t_msg = transport_times(self.size, alpha, Rb, None, 1.0,
+                                    False, use_maxrate=False)
+        return self._phase_proc_sums(t_msg, self._src_key, backend="numpy")
+
+    def _numpy_dense_for(self, p, node_aware, use_maxrate,
+                         same_net) -> np.ndarray:
+        """The numpy reference dense matrix for a ladder configuration —
+        the cached machine pass when it applies, the host pricing path
+        otherwise.  Both the degradation fallback and the
+        ``REPRO_STACK_VERIFY=parity`` reference for the device pricing."""
+        if node_aware and use_maxrate and p is self.machine.params:
+            return self._machine_transport
+        return self._numpy_cost_dense(p, node_aware, use_maxrate, same_net)
+
+    def _device_dense_guarded(self, p, node_aware, use_maxrate, backend_name,
+                              mod, same_net) -> np.ndarray | None:
+        """:meth:`_device_cost_dense` under the degradation contract.
+
+        The ``stack.device_store`` injection site covers the whole device
+        pricing pass (column shipping via :meth:`_dev` has its own
+        fail-point inside).  Any failure — an injected fault, an
+        :class:`repro.comm.guard.ArenaOverflowError` from an oversized
+        arena, a compile error, a ``REPRO_STACK_VERIFY`` rejection — is
+        recorded in :class:`repro.comm.health.BackendHealth` (warn-once,
+        quarantine accounting) and returns None; the caller prices on the
+        numpy path instead.
+        """
+        from repro.kernels import comm_stack as cs
+        health = get_health()
+        if health.is_quarantined(backend_name):
+            return None
+        try:
+            dense = faults.poison(
+                "stack.device_store",
+                self._device_cost_dense(p, node_aware, use_maxrate,
+                                        backend_name, mod, same_net))
+            mode = cs.verify_mode()
+            if mode == "finite":
+                cs._check_finite(dense)
+            elif mode == "parity":
+                cs._check_parity(dense, self._numpy_dense_for(
+                    p, node_aware, use_maxrate, same_net))
+        except Exception as e:  # noqa: BLE001 - degradation catches all
+            health.record_failure(backend_name, "stack.device_store", e)
+            return None
+        health.record_success(backend_name)
+        return dense
 
     def _device_cost_dense(self, p, node_aware, use_maxrate, backend_name,
                            mod, same_net) -> np.ndarray:
@@ -772,8 +837,12 @@ class PhaseStack:
         if backend_name == "numpy":
             dense = self._machine_transport    # cached, shared with the model
         else:
-            dense = self._device_cost_dense(self.machine.params, True, True,
-                                            backend_name, mod, True)
+            # device failures degrade to the cached numpy machine pass
+            # (bit-identical) instead of crashing the simulation
+            dense = self._device_dense_guarded(self.machine.params, True,
+                                               True, backend_name, mod, True)
+            if dense is None:
+                dense = self._machine_transport
         qdense = self.queue_steps_many(recv_post_orders, arrival_orders,
                                        backend=backend_name)
         max_link, net_bytes = self.link_contention_many(backend=backend_name)

@@ -392,6 +392,13 @@ class StrategyVerdict:
     *predicted* winner comes from the model alone — the simulator's verdict
     is the ground truth the prediction is scored against, across the same
     inferential gap the paper has between model and machine.
+
+    ``degraded`` marks a verdict priced under the degradation policy: some
+    backend call failed and fell back to the numpy reference during this
+    sweep (the triggering events are in
+    :func:`repro.comm.health.get_health`'s ledger).  The numbers are still
+    correct — the fallback is the bit-identity reference — but the device
+    path did not serve them.
     """
 
     plans: dict[str, StrategyPlan]
@@ -399,6 +406,7 @@ class StrategyVerdict:
     sim: dict[str, float]
     model_winner: str
     sim_winner: str
+    degraded: bool = False
 
     @property
     def agree(self) -> bool:
@@ -407,7 +415,8 @@ class StrategyVerdict:
 
 def best_strategy(pattern, machine=None, *, strategies=None,
                   level: str = "contention", arrival: str = "random",
-                  seed: int = 0, params=None) -> StrategyVerdict:
+                  seed: int = 0, params=None, backend=None,
+                  validate: bool = False) -> StrategyVerdict:
     """Sweep strategies over one phase; return the model's pick and the
     simulator's verdict.
 
@@ -420,7 +429,9 @@ def best_strategy(pattern, machine=None, *, strategies=None,
     ``seed`` per candidate); ``'posted'`` uses best-case in-order arrival.
     The model prices phases at ladder ``level``; ``params`` substitutes a
     fitted parameter table for the machine's ground truth on the model side
-    only.
+    only.  ``backend`` routes the stacked passes through a device backend;
+    ``validate=True`` runs the typed validation layer over the pattern
+    first (see :func:`best_strategy_many` for both).
 
     The whole candidate set — every strategy's phase sequence — is priced in
     one stacked model pass and one stacked simulator pass: this is the
@@ -428,7 +439,8 @@ def best_strategy(pattern, machine=None, *, strategies=None,
     """
     return best_strategy_many([pattern], machine, strategies=strategies,
                               level=level, arrival=arrival, seed=seed,
-                              params=params)[0]
+                              params=params, backend=backend,
+                              validate=validate)[0]
 
 
 def _machine_groups(phases) -> list[list[int]]:
@@ -445,7 +457,8 @@ def _machine_groups(phases) -> list[list[int]]:
 
 def best_strategy_many(patterns, machine=None, *, strategies=None,
                        level: str = "contention", arrival: str = "random",
-                       seed: int = 0, params=None) -> list[StrategyVerdict]:
+                       seed: int = 0, params=None, backend=None,
+                       validate: bool = False) -> list[StrategyVerdict]:
     """:func:`best_strategy` for a whole sweep of ``patterns`` in ONE arena
     (same ``machine`` / ``strategies`` / ``level`` / ``arrival`` / ``seed``
     / ``params`` arguments).
@@ -461,23 +474,39 @@ def best_strategy_many(patterns, machine=None, *, strategies=None,
     are element-wise identical to ``[best_strategy(p, ...) for p in
     patterns]`` (each candidate keeps its own seeded arrival stream); only
     the number of arena walks changes.
+
+    Hardening (DESIGN.md §12): ``validate=True`` runs the typed validation
+    layer over every pattern before anything is rewritten
+    (:func:`repro.comm.guard.validate_messages` — precise
+    :class:`~repro.comm.guard.PatternError` subclasses).  ``backend``
+    routes the stacked passes through a device backend; every device site
+    already degrades to numpy on failure, and should the pricing passes
+    still raise on a non-numpy backend, the sweep is retried once on
+    ``backend='numpy'``.  Verdicts priced under any fallback carry
+    ``degraded=True`` with the events recorded in
+    :func:`repro.comm.health.get_health`.
     """
     if arrival not in ("random", "posted"):
         raise ValueError(f"unknown arrival regime {arrival!r}; "
                          "expected 'random' or 'posted'")
     from repro.core.models import phase_cost_many
     from repro.net.simulator import simulate_many
+    from .health import get_health
 
     phases = []
     for pat in patterns:
         if hasattr(pat, "bind"):
             if machine is None:
                 raise ValueError("a CommPattern needs a machine to bind to")
-            phases.append(pat.bind(machine))
+            phases.append(pat.bind(machine, validate=validate))
         elif machine is not None and machine is not pat.machine:
             phases.append(CommPhase.build(machine, pat.src, pat.dst,
-                                          pat.size, n_procs=pat.n_procs))
+                                          pat.size, n_procs=pat.n_procs,
+                                          validate=validate))
         else:
+            if validate:
+                from .guard import validate_phase
+                validate_phase(pat)
             phases.append(pat)
 
     plan_rows, spans, all_phases, all_arrivals = [], [], [], []
@@ -498,16 +527,24 @@ def best_strategy_many(patterns, machine=None, *, strategies=None,
                                 else [None] * plan.n_phases)
         plan_rows.append(plans)
         spans.append(row_spans)
-    # one shared arena for both passes; a mixed-machine candidate set (bound
-    # phases from different machines — a cross-machine scenario sweep) is
-    # partitioned by machine and runs one arena per machine group, results
-    # scattered back in place (bit-identical to one arena by the PhaseStack
-    # contract: segmented passes never mix rows across phases)
-    stack = as_stack(all_phases)
-    if stack is not None:
-        costs = phase_cost_many(stack, level=level, params=params)
-        sims = simulate_many(stack, arrival_orders=all_arrivals)
-    else:
+
+    health = get_health()
+    events_before = health.n_events
+
+    def _price(be):
+        # one shared arena for both passes; a mixed-machine candidate set
+        # (bound phases from different machines — a cross-machine scenario
+        # sweep) is partitioned by machine and runs one arena per machine
+        # group, results scattered back in place (bit-identical to one arena
+        # by the PhaseStack contract: segmented passes never mix rows across
+        # phases)
+        stack = as_stack(all_phases)
+        if stack is not None:
+            costs = phase_cost_many(stack, level=level, params=params,
+                                    backend=be)
+            sims = simulate_many(stack, arrival_orders=all_arrivals,
+                                 backend=be)
+            return costs, sims
         costs = [None] * len(all_phases)
         sims = [None] * len(all_phases)
         for idx in _machine_groups(all_phases):
@@ -515,12 +552,29 @@ def best_strategy_many(patterns, machine=None, *, strategies=None,
             sub_stack = as_stack(sub)
             if sub_stack is None:       # single phase / degenerate group
                 sub_stack = sub
-            sub_costs = phase_cost_many(sub_stack, level=level, params=params)
+            sub_costs = phase_cost_many(sub_stack, level=level,
+                                        params=params, backend=be)
             sub_sims = simulate_many(
-                sub_stack, arrival_orders=[all_arrivals[i] for i in idx])
+                sub_stack, arrival_orders=[all_arrivals[i] for i in idx],
+                backend=be)
             for i, c, r in zip(idx, sub_costs, sub_sims):
                 costs[i] = c
                 sims[i] = r
+        return costs, sims
+
+    try:
+        costs, sims = _price(backend)
+    except Exception as e:  # noqa: BLE001 - serve-layer degradation
+        if backend == "numpy":
+            raise       # the reference path itself failed: a real error
+        # backend=None may still resolve to a device backend through the
+        # REPRO_STACK_BACKEND env default, so the numpy retry applies to it
+        # too; a genuine input error re-raises from the retry unchanged
+        health.record_failure(str(backend), "strategies.best_strategy_many",
+                              e)
+        costs, sims = _price("numpy")
+
+    degraded = health.n_events > events_before
     out = []
     for plans, row_spans in zip(plan_rows, spans):
         model = {name: sum(c.total for c in costs[row_spans[name]])
@@ -530,5 +584,5 @@ def best_strategy_many(patterns, machine=None, *, strategies=None,
         out.append(StrategyVerdict(
             plans=plans, model=model, sim=sim,
             model_winner=min(model, key=model.get),
-            sim_winner=min(sim, key=sim.get)))
+            sim_winner=min(sim, key=sim.get), degraded=degraded))
     return out

@@ -110,7 +110,7 @@ def phase_cost(params: CommParams, src, dst, size, loc, *,
                procs_per_torus_node: int = 1,
                n_procs: int | None = None,
                level: str = "contention",
-               active_ppn=None) -> CostBreakdown:
+               active_ppn=None, validate: bool = False) -> CostBreakdown:
     """Model the cost of one communication phase (e.g. one SpMV halo exchange).
 
     Parameters
@@ -121,9 +121,19 @@ def phase_cost(params: CommParams, src, dst, size, loc, *,
     level : which rung of the model ladder to evaluate (``MODEL_LEVELS``).
     active_ppn : precomputed active-senders-per-node array (e.g. the cached
         ``CommPhase.active_ppn``); skips the ``node_of`` recomputation.
+    validate : run the typed validation layer
+        (:func:`repro.comm.guard.validate_messages`) over the message
+        arrays first — NaN/negative sizes and out-of-range ranks raise a
+        precise :class:`repro.comm.guard.PatternError` subclass instead of
+        pricing garbage.
     """
     if level not in MODEL_LEVELS:
         raise ValueError(f"unknown model level {level!r}")
+    if validate:
+        from repro.comm.guard import validate_messages
+        validate_messages(np.asarray(src).ravel(), np.asarray(dst).ravel(),
+                          np.asarray(size).ravel(), n_procs=n_procs,
+                          where="phase_cost")
     src = np.asarray(src, dtype=np.int64)
     dst = np.asarray(dst, dtype=np.int64)
     size = np.asarray(size, dtype=np.float64)

@@ -30,6 +30,18 @@ Backend parity for the float reductions is *allclose*, not bit-equal (the
 device paths run float32); the queue walk is integer work and bit-equal on
 every backend.
 
+Robustness (DESIGN.md §12): every device call here runs inside
+:func:`device_guard` — a named fault-injection site
+(:mod:`repro.comm.faults`) plus the graceful-degradation policy: any
+backend failure falls back to the numpy reference, warns once, and is
+recorded in :class:`repro.comm.health.BackendHealth`, which quarantines a
+backend after repeated consecutive failures.  The optional
+``REPRO_STACK_VERIFY`` post-kernel check (``finite`` | ``parity``) detects
+silent NaN/mismatch in device outputs and triggers the same fallback.  The
+autotune probe is bounded by a cooperative timeout with
+retry-and-backoff, and its disk cache tolerates corruption and read-only
+directories.
+
 This module imports jax lazily so that importing it — and everything in
 :mod:`repro.comm` — stays numpy-only.
 """
@@ -39,9 +51,11 @@ import functools
 import json
 import os
 import time
-import warnings
 
 import numpy as np
+
+from repro.comm import faults
+from repro.comm.health import get_health
 
 BACKENDS = ("numpy", "jax", "pallas", "auto")
 
@@ -67,9 +81,11 @@ def resolve_backend(backend: str | None = None,
     pass ``n_values`` (the reduction's input length) to collapse it to a
     concrete choice here — without ``n_values`` the string ``'auto'`` is
     returned for the caller to resolve per call.  Explicit ``'jax'`` /
-    ``'pallas'`` requests fall back to numpy with a warning when jax is not
-    importable; ``'auto'`` falls back silently (it is a default, not a
-    request).
+    ``'pallas'`` requests fall back to numpy with a warning (once per
+    process, via the resettable :class:`repro.comm.health.BackendHealth`
+    registry) when jax is not importable or the backend is quarantined
+    after repeated failures; ``'auto'`` falls back silently (it is a
+    default, not a request).
     """
     if backend is None:
         backend = "auto"
@@ -78,13 +94,120 @@ def resolve_backend(backend: str | None = None,
             f"unknown stack backend {backend!r}; expected one of {BACKENDS}")
     if backend != "numpy" and not have_jax():
         if backend != "auto":
-            warnings.warn(f"stack backend {backend!r} requested but jax is "
-                          "not importable; falling back to numpy",
-                          RuntimeWarning, stacklevel=2)
+            get_health().warn_once(
+                f"nojax:{backend}",
+                f"stack backend {backend!r} requested but jax is not "
+                "importable; falling back to numpy")
         return "numpy"
     if backend == "auto" and n_values is not None:
-        return "numpy" if n_values < autotune_crossover() else "jax"
+        backend = "numpy" if n_values < autotune_crossover() else "jax"
+    if backend in ("jax", "pallas") and get_health().is_quarantined(backend):
+        get_health().warn_once(
+            f"resolve-quarantined:{backend}",
+            f"stack backend {backend!r} is quarantined after repeated "
+            "failures; resolving to numpy (BackendHealth.reset() restores)")
+        return "numpy"
     return backend
+
+
+# -- graceful degradation around device calls --------------------------------
+
+#: Allowed ``REPRO_STACK_VERIFY`` values: ``''`` (off), ``finite`` (reject
+#: non-finite device outputs), ``parity`` (compare device outputs against
+#: the numpy reference, allclose).
+VERIFY_MODES = ("", "finite", "parity")
+
+
+class BackendVerifyError(RuntimeError):
+    """A device output failed the ``REPRO_STACK_VERIFY`` post-kernel check."""
+
+
+def verify_mode() -> str:
+    """The active post-kernel check, from ``REPRO_STACK_VERIFY``.
+
+    ``finite`` rejects NaN/inf in device outputs; ``parity`` recomputes the
+    numpy reference and rejects non-allclose outputs.  Either rejection is
+    a :class:`BackendVerifyError`, which the degradation policy treats like
+    any other backend failure (fallback + health event).  An unknown value
+    raises ``ValueError`` naming the allowed modes.
+    """
+    mode = os.environ.get("REPRO_STACK_VERIFY", "")
+    if mode not in VERIFY_MODES:
+        raise ValueError(
+            f"unknown REPRO_STACK_VERIFY value {mode!r}; allowed values: "
+            f"{VERIFY_MODES}")
+    return mode
+
+
+def _leaves(value):
+    return value if isinstance(value, tuple) else (value,)
+
+
+def _check_finite(value) -> None:
+    for leaf in _leaves(value):
+        arr = np.asarray(leaf)
+        if np.issubdtype(arr.dtype, np.floating) and not np.isfinite(arr).all():
+            raise BackendVerifyError(
+                "device output contains non-finite values "
+                "(REPRO_STACK_VERIFY=finite)")
+
+
+def _check_parity(value, ref) -> None:
+    for got, want in zip(_leaves(value), _leaves(ref)):
+        g = np.asarray(got)
+        w = np.asarray(want)
+        if np.issubdtype(g.dtype, np.integer) and \
+                np.issubdtype(w.dtype, np.integer):
+            # integer device outputs are bit-equal by contract; allclose
+            # would let a +1 shift on large values slide under rtol
+            ok = g.shape == w.shape and (g == w).all()
+        else:
+            ok = np.allclose(g.astype(np.float64), w.astype(np.float64),
+                             rtol=1e-4, atol=1e-6, equal_nan=False)
+        if not ok:
+            raise BackendVerifyError(
+                "device output does not match the numpy reference "
+                "(REPRO_STACK_VERIFY=parity)")
+
+
+def device_guard(site: str, backend: str, device_fn, numpy_fn):
+    """Run one device-backend call under the full degradation contract.
+
+    ``device_fn`` (no arguments) performs the device work; ``numpy_fn`` (no
+    arguments) computes the bit-identity numpy reference.  In order:
+
+    1. a quarantined ``backend`` skips the device path entirely and returns
+       ``numpy_fn()`` (the quarantine was announced when it was imposed);
+    2. the :mod:`repro.comm.faults` injection site ``site`` may raise
+       (``raise`` / ``timeout`` modes) or poison the device output
+       (``nan`` / ``corrupt`` modes);
+    3. the ``REPRO_STACK_VERIFY`` post-kernel check, when enabled, rejects
+       non-finite (``finite``) or non-matching (``parity``) device outputs;
+    4. *any* failure in 2-3 — or in the device computation itself — is
+       recorded in :class:`repro.comm.health.BackendHealth` (warn-once,
+       streak accounting, quarantine after repeated failures) and the call
+       returns ``numpy_fn()`` instead of raising.
+
+    A successful device call records a success (clearing the backend's
+    failure streak) and returns the device output.
+    """
+    health = get_health()
+    if health.is_quarantined(backend):
+        return numpy_fn()
+    try:
+        faults.fail_point(site)
+        out = faults.poison(site, device_fn())
+        mode = verify_mode()
+        if mode == "finite":
+            _check_finite(out)
+        elif mode == "parity":
+            ref = numpy_fn()
+            _check_parity(out, ref)
+    except Exception as e:  # noqa: BLE001 - degradation catches everything
+        health.record_failure(backend, site, e)
+        return numpy_fn()
+    health.record_success(backend)
+    return out
 
 
 # -- autotuned numpy/jax crossover -------------------------------------------
@@ -136,6 +259,77 @@ def _probe_pair(n: int) -> tuple[float, float]:
     return t_np, t_jax
 
 
+#: Live-probe hardening: per-size retry attempts, base backoff seconds
+#: (doubling per retry), and the cooperative probe deadline (seconds,
+#: override with ``REPRO_STACK_PROBE_TIMEOUT``).
+_PROBE_RETRIES = 3
+_PROBE_BACKOFF = 0.05
+_PROBE_TIMEOUT = 60.0
+
+
+def _read_probe_cache(path: str, tag: str) -> float | None:
+    """The cached crossover at ``path``, or None when the cache is absent,
+    unreadable, corrupt, or tagged for a different software stack (a
+    corrupt cache is recorded as a health event and reprobed, never
+    trusted and never fatal)."""
+    if not os.path.exists(path):
+        return None
+    try:
+        faults.fail_point("autotune.cache_read")
+        with open(path) as fh:
+            raw = faults.poison("autotune.cache_read", fh.read())
+        rec = json.loads(raw)
+        if rec.get("tag") == tag:
+            return float(rec["crossover"])
+    except (OSError, ValueError, KeyError, TypeError) as e:
+        get_health().record_failure("disk-cache", "autotune.cache_read", e)
+    return None
+
+
+def _write_probe_cache(path: str, tag: str, cross: float) -> None:
+    """Persist a probe result; a read-only/failing cache directory is a
+    recorded health event, not an error (the probe result still serves the
+    process from the in-memory memo)."""
+    try:
+        faults.fail_point("autotune.cache_write")
+        with open(path, "w") as fh:
+            json.dump({"tag": tag, "crossover": cross,
+                       "sizes": list(_PROBE_SIZES)}, fh)
+    except OSError as e:
+        get_health().record_failure("disk-cache", "autotune.cache_write", e)
+
+
+def _probe_crossover() -> float:
+    """Run the live probe under a cooperative deadline with per-size
+    retry-and-backoff; degrades to ``inf`` (numpy always) when the probe
+    keeps failing or the deadline passes — a strategy-service query must
+    never hang or crash on a misbehaving probe."""
+    deadline = time.monotonic() + float(
+        os.environ.get("REPRO_STACK_PROBE_TIMEOUT", _PROBE_TIMEOUT))
+    for n in _PROBE_SIZES:
+        for attempt in range(_PROBE_RETRIES):
+            try:
+                if time.monotonic() > deadline:
+                    raise TimeoutError(
+                        f"autotune probe deadline exceeded before size {n}")
+                faults.fail_point("autotune.probe")
+                t_np, t_jax = _probe_pair(n)
+            except TimeoutError as e:
+                # the deadline is global: no point retrying or probing on
+                get_health().record_failure("autotune", "autotune.probe", e)
+                return float("inf")
+            except Exception as e:  # noqa: BLE001 - degradation
+                get_health().record_failure("autotune", "autotune.probe", e)
+                if attempt + 1 == _PROBE_RETRIES:
+                    return float("inf")
+                time.sleep(_PROBE_BACKOFF * 2 ** attempt)
+            else:
+                if t_jax < t_np:
+                    return float(n)
+                break                      # this size settled: next size
+    return float("inf")
+
+
 def autotune_crossover(refresh: bool = False) -> float:
     """The measured input size where the jitted jax segment reduction starts
     beating numpy's ``bincount`` (``float('inf')`` when it never does — e.g.
@@ -143,11 +337,18 @@ def autotune_crossover(refresh: bool = False) -> float:
 
     Resolution order: in-process memo -> ``REPRO_STACK_AUTOTUNE`` env
     override (a number, ``inf`` allowed) -> on-disk probe cache (the path in
-    ``REPRO_STACK_AUTOTUNE_CACHE``, ignored when its software tag no longer
-    matches) -> a live probe over ``_PROBE_SIZES`` with device-resident
-    inputs (first size where jax wins).  ``refresh=True`` forces a new probe
-    and rewrites the disk cache.  The probe costs a few jit compiles once
-    per process; pin the env var to skip it entirely.
+    ``REPRO_STACK_AUTOTUNE_CACHE``, ignored — with a recorded health event —
+    when corrupt or when its software tag no longer matches) -> a live probe
+    over ``_PROBE_SIZES`` with device-resident inputs (first size where jax
+    wins).  ``refresh=True`` forces a new probe and rewrites the disk cache.
+    The probe costs a few jit compiles once per process; pin the env var to
+    skip it entirely.
+
+    Hardened for service use: the probe runs under a cooperative deadline
+    (``REPRO_STACK_PROBE_TIMEOUT`` seconds) with retry-and-backoff per
+    size, and every failure path — probe timeout, corrupt cache, read-only
+    cache directory — degrades to a usable crossover (``inf`` = numpy)
+    instead of raising.
     """
     global _crossover
     if _crossover is not None and not refresh:
@@ -158,32 +359,18 @@ def autotune_crossover(refresh: bool = False) -> float:
         return _crossover
     path = os.environ.get("REPRO_STACK_AUTOTUNE_CACHE")
     tag = _probe_tag()
-    if path and not refresh and os.path.exists(path):
-        try:
-            with open(path) as fh:
-                rec = json.load(fh)
-            if rec.get("tag") == tag:
-                _crossover = float(rec["crossover"])
-                return _crossover
-        except (OSError, ValueError, KeyError):  # pragma: no cover - corrupt
-            pass                                 # cache: reprobe below
+    if path and not refresh:
+        cached = _read_probe_cache(path, tag)
+        if cached is not None:
+            _crossover = cached
+            return _crossover
     if not have_jax():
         _crossover = float("inf")
         return _crossover
-    cross = float("inf")
-    for n in _PROBE_SIZES:
-        t_np, t_jax = _probe_pair(n)
-        if t_jax < t_np:
-            cross = float(n)
-            break
+    cross = _probe_crossover()
     _crossover = cross
     if path:
-        try:
-            with open(path, "w") as fh:
-                json.dump({"tag": tag, "crossover": cross,
-                           "sizes": list(_PROBE_SIZES)}, fh)
-        except OSError:  # pragma: no cover - read-only cache dir
-            pass
+        _write_probe_cache(path, tag, cross)
     return cross
 
 
@@ -281,69 +468,103 @@ def fused_segment_reduce(values, seg_ids,
     ``s_pad = roundup(n_seg + 1, _LANE)`` guarantees a sink column for the
     padded message lanes.  Empty segments report sum 0 and max 0 (the
     contention reduction's inputs are non-negative byte counts).
-    """
-    import jax.numpy as jnp
 
+    Kernel failures degrade to the numpy reference pair via
+    :func:`device_guard` (site ``kernel.segment_reduce``).
+    """
     values = np.asarray(values)
     seg_ids = np.asarray(seg_ids)
-    n = values.size
-    n_pad = max(_CHUNK, -(-n // _CHUNK) * _CHUNK)
-    s_pad = max(_LANE, -(-(n_seg + 1) // _LANE) * _LANE)
-    ids = np.full((1, n_pad), s_pad - 1, dtype=np.int32)
-    ids[0, :n] = seg_ids
-    vals = np.zeros((1, n_pad), dtype=np.float32)
-    vals[0, :n] = values
-    s, mx = _pallas_segreduce(n_pad, s_pad)(jnp.asarray(ids),
-                                            jnp.asarray(vals))
-    sums = np.asarray(s)[0, :n_seg].astype(np.float64)
-    maxs = np.asarray(mx)[0, :n_seg].astype(np.float64)
-    maxs[np.isneginf(maxs)] = 0.0                     # empty segments
-    return sums, maxs
+
+    def device_fn():
+        import jax.numpy as jnp
+
+        n = values.size
+        n_pad = max(_CHUNK, -(-n // _CHUNK) * _CHUNK)
+        s_pad = max(_LANE, -(-(n_seg + 1) // _LANE) * _LANE)
+        ids = np.full((1, n_pad), s_pad - 1, dtype=np.int32)
+        ids[0, :n] = seg_ids
+        vals = np.zeros((1, n_pad), dtype=np.float32)
+        vals[0, :n] = values
+        s, mx = _pallas_segreduce(n_pad, s_pad)(jnp.asarray(ids),
+                                                jnp.asarray(vals))
+        sums = np.asarray(s)[0, :n_seg].astype(np.float64)
+        maxs = np.asarray(mx)[0, :n_seg].astype(np.float64)
+        maxs[np.isneginf(maxs)] = 0.0                 # empty segments
+        return sums, maxs
+
+    return device_guard(
+        "kernel.segment_reduce", "pallas", device_fn,
+        lambda: (_segment_sum_numpy(values, seg_ids, n_seg),
+                 _segment_max_numpy(values, seg_ids, n_seg)))
 
 
 # -- public segment reductions -----------------------------------------------
+
+def _segment_sum_numpy(values, seg_ids, n_seg: int) -> np.ndarray:
+    """The bit-identity numpy reference for :func:`segment_sum` (also the
+    degradation fallback for the device backends)."""
+    return np.bincount(np.asarray(seg_ids, dtype=np.int64),
+                       weights=np.asarray(values, dtype=np.float64),
+                       minlength=n_seg)
+
+
+def _segment_max_numpy(values, seg_ids, n_seg: int) -> np.ndarray:
+    """The bit-identity numpy reference for :func:`segment_max`."""
+    out = np.zeros(n_seg)
+    np.maximum.at(out, np.asarray(seg_ids, dtype=np.int64),
+                  np.asarray(values, dtype=np.float64))
+    return out
+
 
 def segment_sum(values, seg_ids, n_seg: int,
                 backend: str | None = None) -> np.ndarray:
     """Sum ``values`` into ``n_seg`` bins by ``seg_ids`` on the chosen
     backend (``None``/``'auto'`` = the autotuned default).  Device inputs
     (jax arrays) stay resident on the jax path; the reduced dense result is
-    returned on the host."""
+    returned on the host.  Device-backend failures degrade to the numpy
+    reference via :func:`device_guard` (site ``kernel.segment_reduce``)."""
     if backend in (None, "auto"):
         backend = resolve_backend("auto", n_values=_size_of(seg_ids))
     if backend == "numpy":
-        return np.bincount(np.asarray(seg_ids, dtype=np.int64),
-                           weights=np.asarray(values, dtype=np.float64),
-                           minlength=n_seg)
+        return _segment_sum_numpy(values, seg_ids, n_seg)
     if backend == "pallas":
         return fused_segment_reduce(values, seg_ids, n_seg)[0]
-    import jax.numpy as jnp
-    seg_sum, _ = _jax_segment_ops()
-    return np.asarray(seg_sum(_as_device(values, jnp.float32),
-                              _as_device(seg_ids, jnp.int32), n_seg),
-                      dtype=np.float64)
+
+    def device_fn():
+        import jax.numpy as jnp
+        seg_sum, _ = _jax_segment_ops()
+        return np.asarray(seg_sum(_as_device(values, jnp.float32),
+                                  _as_device(seg_ids, jnp.int32), n_seg),
+                          dtype=np.float64)
+
+    return device_guard("kernel.segment_reduce", backend, device_fn,
+                        lambda: _segment_sum_numpy(values, seg_ids, n_seg))
 
 
 def segment_max(values, seg_ids, n_seg: int,
                 backend: str | None = None) -> np.ndarray:
     """Per-segment maximum (0.0 for empty segments, matching the stacked
-    contention reduction where all inputs are non-negative byte counts)."""
+    contention reduction where all inputs are non-negative byte counts).
+    Device-backend failures degrade to the numpy reference via
+    :func:`device_guard` (site ``kernel.segment_reduce``)."""
     if backend in (None, "auto"):
         backend = resolve_backend("auto", n_values=_size_of(seg_ids))
     if backend == "numpy":
-        out = np.zeros(n_seg)
-        np.maximum.at(out, np.asarray(seg_ids, dtype=np.int64),
-                      np.asarray(values, dtype=np.float64))
-        return out
+        return _segment_max_numpy(values, seg_ids, n_seg)
     if backend == "pallas":
         return fused_segment_reduce(values, seg_ids, n_seg)[1]
-    import jax.numpy as jnp
-    _, seg_max = _jax_segment_ops()
-    out = np.asarray(seg_max(_as_device(values, jnp.float32),
-                             _as_device(seg_ids, jnp.int32), n_seg),
-                     dtype=np.float64)
-    out[np.isneginf(out)] = 0.0
-    return out
+
+    def device_fn():
+        import jax.numpy as jnp
+        _, seg_max = _jax_segment_ops()
+        out = np.asarray(seg_max(_as_device(values, jnp.float32),
+                                 _as_device(seg_ids, jnp.int32), n_seg),
+                         dtype=np.float64)
+        out[np.isneginf(out)] = 0.0
+        return out
+
+    return device_guard("kernel.segment_reduce", backend, device_fn,
+                        lambda: _segment_max_numpy(values, seg_ids, n_seg))
 
 
 # -- device Fenwick queue walk -----------------------------------------------
@@ -503,15 +724,22 @@ def queue_walk(posted, arrival, bounds, backend: str | None = None) -> np.ndarra
     work, so every backend is bit-equal to the numpy reference — the device
     paths just run all rounds in one program instead of one host-synced
     array pass per round.  Index arithmetic runs in int32 on device
-    (arenas beyond 2^31 - 1 queue slots must use numpy).
+    (arenas beyond 2^31 - 1 queue slots must use numpy).  Device-backend
+    failures degrade to the numpy reference via :func:`device_guard`
+    (site ``kernel.queue_walk``) — bit-identically, since the walk is
+    integer work.
     """
     if backend in (None, "auto"):
         backend = resolve_backend("auto", n_values=_size_of(posted))
     else:
         backend = resolve_backend(backend)
-    if backend == "numpy":
+
+    def numpy_fn():
         from repro.comm.primitives import batched_queue_traversal_steps
         return batched_queue_traversal_steps(posted, arrival, bounds)
+
+    if backend == "numpy":
+        return numpy_fn()
 
     tree, b, starts, counts, toff, span, depth, rounds = _queue_layout(
         posted, arrival, bounds)
@@ -519,28 +747,32 @@ def queue_walk(posted, arrival, bounds, backend: str | None = None) -> np.ndarra
     if N == 0 or rounds == 0:
         return np.zeros(N, dtype=np.int64)
     if tree.size - 1 >= np.iinfo(np.int32).max:       # pragma: no cover
-        from repro.comm.primitives import batched_queue_traversal_steps
-        return batched_queue_traversal_steps(posted, arrival, bounds)
-    import jax.numpy as jnp
-    if backend == "jax":
-        walk = _jax_queue_walk(depth)
-        steps = walk(jnp.asarray(tree, jnp.int32), jnp.asarray(b, jnp.int32),
-                     jnp.asarray(starts, jnp.int32),
-                     jnp.asarray(counts, jnp.int32),
-                     jnp.asarray(toff, jnp.int32),
-                     jnp.asarray(span, jnp.int32), rounds)
-        return np.asarray(steps, dtype=np.int64)
-    # pallas: pad every row to a lane multiple; padded regions have count 0
-    # (never active) and padded chains park at the shared sink (last cell)
-    def up(n):
-        return max(_LANE, -(-n // _LANE) * _LANE)
+        return numpy_fn()
 
-    n_pad, r_pad, t_pad = up(N), up(int(counts.size)), up(int(tree.size))
-    call = _pallas_queue_walk(n_pad, r_pad, t_pad, depth, rounds)
-    steps = call(_pad_row(tree, t_pad, 0), _pad_row(b, n_pad, 0),
-                 _pad_row(starts, r_pad, 0), _pad_row(counts, r_pad, 0),
-                 _pad_row(toff, r_pad, 0), _pad_row(span, r_pad, 0))
-    return np.asarray(steps)[0, :N].astype(np.int64)
+    def device_fn():
+        import jax.numpy as jnp
+        if backend == "jax":
+            walk = _jax_queue_walk(depth)
+            steps = walk(jnp.asarray(tree, jnp.int32),
+                         jnp.asarray(b, jnp.int32),
+                         jnp.asarray(starts, jnp.int32),
+                         jnp.asarray(counts, jnp.int32),
+                         jnp.asarray(toff, jnp.int32),
+                         jnp.asarray(span, jnp.int32), rounds)
+            return np.asarray(steps, dtype=np.int64)
+        # pallas: pad every row to a lane multiple; padded regions have
+        # count 0 (never active) and padded chains park at the shared sink
+        def up(n):
+            return max(_LANE, -(-n // _LANE) * _LANE)
+
+        n_pad, r_pad, t_pad = up(N), up(int(counts.size)), up(int(tree.size))
+        call = _pallas_queue_walk(n_pad, r_pad, t_pad, depth, rounds)
+        steps = call(_pad_row(tree, t_pad, 0), _pad_row(b, n_pad, 0),
+                     _pad_row(starts, r_pad, 0), _pad_row(counts, r_pad, 0),
+                     _pad_row(toff, r_pad, 0), _pad_row(span, r_pad, 0))
+        return np.asarray(steps)[0, :N].astype(np.int64)
+
+    return device_guard("kernel.queue_walk", backend, device_fn, numpy_fn)
 
 
 # -- deprecated one-hot era shims --------------------------------------------
@@ -551,8 +783,6 @@ def queue_walk(posted, arrival, bounds, backend: str | None = None) -> np.ndarra
 #: written against the old reroute logic keep working.
 PALLAS_ONE_HOT_LIMIT = 1 << 24
 
-_warned_one_hot = False
-
 
 def pallas_within_limit(n_values: int, n_seg: int) -> bool:
     """Deprecated: always True.
@@ -560,15 +790,14 @@ def pallas_within_limit(n_values: int, n_seg: int) -> bool:
     The one-hot Pallas kernel this guarded was replaced by the fused
     scatter-accumulate kernel (:func:`fused_segment_reduce`), which is
     O(messages) — there is no work ceiling and no jax reroute.  Warns once
-    per process, then delegates to the new behaviour (every size is within
-    limit).
+    per process (via the resettable
+    :class:`repro.comm.health.BackendHealth` registry), then delegates to
+    the new behaviour (every size is within limit).
     """
-    global _warned_one_hot
-    if not _warned_one_hot:
-        _warned_one_hot = True
-        warnings.warn(
-            "pallas_within_limit/PALLAS_ONE_HOT_LIMIT are deprecated: the "
-            "one-hot kernel was replaced by a fused scatter-accumulate "
-            "kernel with no size limit; the pallas backend now handles "
-            "every request directly", DeprecationWarning, stacklevel=2)
+    get_health().warn_once(
+        "kernels.one_hot_deprecated",
+        "pallas_within_limit/PALLAS_ONE_HOT_LIMIT are deprecated: the "
+        "one-hot kernel was replaced by a fused scatter-accumulate "
+        "kernel with no size limit; the pallas backend now handles "
+        "every request directly", category=DeprecationWarning, stacklevel=3)
     return True

@@ -139,9 +139,18 @@ def simulate_phase(machine: MachineSpec, src, dst, size,
                    recv_post_order: dict[int, np.ndarray] | None = None,
                    arrival_order: dict[int, np.ndarray] | None = None,
                    rng: np.random.Generator | None = None,
-                   noise: float = 0.0) -> PhaseResult:
-    """Simulate one phase of point-to-point messages (array-level entry)."""
-    return simulate(CommPhase.build(machine, src, dst, size),
+                   noise: float = 0.0, validate: bool = False) -> PhaseResult:
+    """Simulate one phase of point-to-point messages (array-level entry).
+
+    ``validate=True`` runs the typed validation layer over the message
+    arrays first (:func:`repro.comm.guard.validate_messages` via
+    :meth:`repro.comm.CommPhase.build`): NaN/negative sizes and
+    out-of-range ranks raise a precise
+    :class:`repro.comm.guard.PatternError` subclass instead of simulating
+    garbage.
+    """
+    return simulate(CommPhase.build(machine, src, dst, size,
+                                    validate=validate),
                     recv_post_order=recv_post_order,
                     arrival_order=arrival_order, rng=rng, noise=noise)
 

@@ -1,3 +1,26 @@
-from .engine import ServeEngine, Request
+"""Serving layer: the batched decode engine and the strategy query service.
 
-__all__ = ["ServeEngine", "Request"]
+:class:`ServeEngine` / :class:`Request` (in :mod:`repro.serve.engine`)
+need jax; :class:`StrategyService` / :class:`ServiceResult` (in
+:mod:`repro.serve.strategy`) are numpy-only.  Imports are lazy per
+attribute so ``from repro.serve import StrategyService`` works on hosts
+without jax.
+"""
+__all__ = ["ServeEngine", "Request", "StrategyService", "ServiceResult"]
+
+_ENGINE = ("ServeEngine", "Request")
+_STRATEGY = ("StrategyService", "ServiceResult")
+
+
+def __getattr__(name):
+    if name in _ENGINE:
+        from . import engine
+        return getattr(engine, name)
+    if name in _STRATEGY:
+        from . import strategy
+        return getattr(strategy, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -39,11 +39,30 @@ class ServeEngine:
         self.queue: deque[Request] = deque()
         self.slots: list[Request | None] = [None] * batch_slots
         self.pos = np.zeros(batch_slots, dtype=np.int64)
+        self.finished: list[Request] = []
         self.cache = M.init_cache(cfg, batch_slots, max_seq)
         self._decode = jax.jit(
             lambda p, c, t, i: M.decode_step(p, cfg, c, t, i))
 
     def submit(self, req: Request):
+        """Enqueue a request after validating it.
+
+        A malformed request is rejected here with a precise ``ValueError``
+        instead of crashing (or silently wedging) the shared batch loop
+        mid-decode: the prompt must be non-empty, ``max_new_tokens`` must be
+        positive, and prompt plus generation budget must fit the engine's
+        ``max_seq`` cache window.
+        """
+        if not req.prompt:
+            raise ValueError(f"request {req.uid}: prompt must be non-empty")
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.uid}: max_new_tokens must be >= 1, got "
+                f"{req.max_new_tokens}")
+        if len(req.prompt) >= self.max_seq:
+            raise ValueError(
+                f"request {req.uid}: prompt length {len(req.prompt)} "
+                f"exceeds the engine's max_seq = {self.max_seq} window")
         self.queue.append(req)
 
     # ------------------------------------------------------------------
@@ -118,12 +137,17 @@ class ServeEngine:
                         or self.pos[s] >= self.max_seq - 1):
                     req.done = True
                     self.slots[s] = None
+                    self.finished.append(req)
         return True
 
     def run_until_done(self, max_ticks: int = 1000) -> list[Request]:
-        finished: list[Request] = []
+        """Run engine ticks until queue and slots drain (or ``max_ticks``).
+
+        Returns every request completed so far, in completion order (the
+        engine's cumulative ``finished`` list).
+        """
         ticks = 0
         while (self.queue or any(self.slots)) and ticks < max_ticks:
             self.step()
             ticks += 1
-        return finished
+        return self.finished

@@ -1,0 +1,165 @@
+"""StrategyService: the never-fail query front-end for strategy selection.
+
+The strategy sweep (:func:`repro.comm.best_strategy_many`) is graduating
+into a long-lived service: callers hand it traffic shapes (patterns) and
+expect an answer for every one of them, whatever the state of the device
+backends, the autotune cache, or the input itself.  This module is that
+front door.  Contract: :meth:`StrategyService.query_many` **returns one
+:class:`ServiceResult` per pattern and never raises** —
+
+* an invalid pattern (NaN sizes, out-of-range ranks, …) comes back as a
+  result with ``verdict=None`` and the precise typed
+  :class:`repro.comm.guard.PatternError` in ``error``, while the other
+  patterns in the batch still price normally;
+* a device-backend failure degrades to the numpy bit-identity reference
+  inside the stack (DESIGN.md §12) — the verdict is still exact, flagged
+  ``degraded=True``, with the events in the
+  :class:`repro.comm.health.BackendHealth` ledger;
+* should the sweep itself still fail, the service retries the worst-case
+  configuration — the ``standard`` strategy alone, priced on the numpy
+  backend — and only if *that* fails does it return ``verdict=None`` with
+  the error recorded (never raised).
+
+numpy-only import: ``from repro.serve import StrategyService`` works
+without jax (the batched :class:`repro.serve.ServeEngine` is a separate,
+lazily-imported module).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+__all__ = ["ServiceResult", "StrategyService"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceResult:
+    """One pattern's answer from :class:`StrategyService`.
+
+    ``verdict`` is the :class:`repro.comm.StrategyVerdict` (None when even
+    the worst-case retry could not price the pattern — then ``error`` holds
+    the reason).  ``degraded`` marks any answer that did not come from the
+    requested configuration: a backend fallback inside the stack, or the
+    service's standard-on-numpy retry.  ``error`` is the triggering
+    exception for rejected/failed patterns (a typed
+    :class:`repro.comm.guard.PatternError` for invalid input), None for
+    clean answers.
+    """
+
+    verdict: Any | None
+    degraded: bool = False
+    error: Exception | None = None
+
+    @property
+    def ok(self) -> bool:
+        """Whether a verdict was produced (possibly degraded)."""
+        return self.verdict is not None
+
+
+class StrategyService:
+    """A hardened, stateful wrapper around :func:`repro.comm.best_strategy_many`.
+
+    Parameters
+    ----------
+    machine : the machine preset queries bind to (any
+        :class:`repro.net.MachineSpec`).
+    level : model-ladder level queries price at (default ``'contention'``).
+    arrival : simulator arrival regime (``'random'`` / ``'posted'``).
+    seed : per-candidate arrival seed (default 0).
+    backend : stacked-pass backend request (None = the session default).
+    strategies : strategy names to sweep (default: every strategy the
+        machine supports, via :func:`repro.comm.strategies_for`).
+    validate : run the typed validation layer over every query pattern
+        (default True — the service's whole point is rejecting garbage
+        precisely instead of pricing it).
+
+    :meth:`query` / :meth:`query_many` never raise; see the module
+    docstring for the degradation ladder.  The service is stateless between
+    calls except for the process-wide
+    :class:`repro.comm.health.BackendHealth` ledger it shares with the
+    stack (inspect via :meth:`health`).
+    """
+
+    def __init__(self, machine, *, level: str = "contention",
+                 arrival: str = "random", seed: int = 0,
+                 backend: str | None = None,
+                 strategies: tuple[str, ...] | None = None,
+                 validate: bool = True):
+        self.machine = machine
+        self.level = level
+        self.arrival = arrival
+        self.seed = seed
+        self.backend = backend
+        self.strategies = strategies
+        self.validate = validate
+
+    def health(self):
+        """The process-wide :class:`repro.comm.health.BackendHealth` ledger
+        (degradation events, quarantines) this service's queries report to."""
+        from repro.comm.health import get_health
+        return get_health()
+
+    def query(self, pattern) -> ServiceResult:
+        """Price one pattern; never raises (the one-pattern
+        :meth:`query_many`)."""
+        return self.query_many([pattern])[0]
+
+    def query_many(self, patterns) -> list[ServiceResult]:
+        """Price a batch of patterns: one :class:`ServiceResult` each.
+
+        Invalid patterns are rejected individually (typed error in
+        ``error``) without failing the batch; the valid remainder prices in
+        one arena sweep.  A sweep failure retries the worst case —
+        ``strategies=('standard',)`` on ``backend='numpy'`` — before giving
+        up on a pattern, and any fallback anywhere marks the affected
+        results ``degraded=True``.
+        """
+        from repro.comm.guard import PatternError, validate_phase
+        from repro.comm.health import get_health
+        from repro.comm.strategies import best_strategy_many
+
+        patterns = list(patterns)
+        results: list[ServiceResult | None] = [None] * len(patterns)
+        live: list[int] = []
+        for i, pat in enumerate(patterns):
+            if self.validate:
+                try:
+                    validate_phase(pat, where=f"query[{i}]")
+                except PatternError as e:
+                    results[i] = ServiceResult(verdict=None, error=e)
+                    continue
+            live.append(i)
+        if not live:
+            return results
+
+        health = get_health()
+
+        def _sweep(idx, strategies, backend):
+            verdicts = best_strategy_many(
+                [patterns[i] for i in idx], self.machine,
+                strategies=strategies, level=self.level,
+                arrival=self.arrival, seed=self.seed, backend=backend,
+                validate=False)          # already validated above
+            return verdicts
+
+        try:
+            verdicts = _sweep(live, self.strategies, self.backend)
+            for i, v in zip(live, verdicts):
+                results[i] = ServiceResult(verdict=v, degraded=v.degraded)
+            return results
+        except Exception as e:  # noqa: BLE001 - the service must answer
+            health.record_failure(str(self.backend or "auto"),
+                                  "serve.query_many", e)
+
+        # worst case: the standard strategy alone, priced on numpy — one
+        # pattern at a time so a single pathological pattern cannot take
+        # the rest of the batch down with it
+        for i in live:
+            try:
+                v = _sweep([i], ("standard",), "numpy")[0]
+                results[i] = ServiceResult(verdict=v, degraded=True)
+            except Exception as e:  # noqa: BLE001
+                health.record_failure("numpy", "serve.query_many", e)
+                results[i] = ServiceResult(verdict=None, degraded=True,
+                                           error=e)
+        return results

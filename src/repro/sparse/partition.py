@@ -78,11 +78,28 @@ class CommPattern:
             return 0
         return int(np.bincount(self.dst, minlength=self.n_procs).max())
 
-    def bind(self, machine, n_procs: int | None = None) -> CommPhase:
+    def validate(self, where: str | None = None) -> "CommPattern":
+        """Run the typed validation layer over this pattern and return it.
+
+        Raises a precise :class:`repro.comm.guard.PatternError` subclass
+        for NaN / negative message sizes, out-of-range or non-integral
+        ranks, or an int32-overflow arena — before the pattern reaches any
+        kernel.  ``where`` labels the pattern in error text (default:
+        ``'CommPattern'``).  Returns ``self``, so it chains:
+        ``pattern.validate().bind(machine)``.
+        """
+        from repro.comm.guard import validate_phase
+        validate_phase(self, where=where)
+        return self
+
+    def bind(self, machine, n_procs: int | None = None,
+             validate: bool = False) -> CommPhase:
         """Bind this pattern to a machine: returns a :class:`CommPhase` with
-        locality, protocol, torus endpoints and active-sender counts cached."""
+        locality, protocol, torus endpoints and active-sender counts cached.
+        ``validate=True`` runs :meth:`validate` first."""
         return CommPhase.build(machine, self.src, self.dst, self.size,
-                               n_procs=self.n_procs if n_procs is None else n_procs)
+                               n_procs=self.n_procs if n_procs is None else n_procs,
+                               validate=validate)
 
     def rewrite(self, machine, strategy: str):
         """Bind to ``machine`` and apply a node-aware strategy rewrite.

@@ -181,12 +181,14 @@ def pattern_from_counts(counts, d_model: int, capacity: int,
     src, dst = np.nonzero(pair_tokens)
     size = pair_tokens[src, dst].astype(np.float64) * d_model * act_bytes
     dispatch = CommPattern(src=src.astype(np.int64), dst=dst.astype(np.int64),
-                           size=size, n_procs=M)
+                           size=size, n_procs=M).validate(
+                               where="pattern_from_counts(dispatch)")
     # combine mirrors dispatch exactly: outputs retrace the token routes
     order = np.lexsort((src, dst))              # canonical (src, dst) order
     combine = CommPattern(src=dst[order].astype(np.int64),
                           dst=src[order].astype(np.int64),
-                          size=size[order].copy(), n_procs=M)
+                          size=size[order].copy(), n_procs=M).validate(
+                              where="pattern_from_counts(combine)")
     return MoeA2APattern(dispatch=dispatch, combine=combine, counts=counts,
                          sent=sent, capacity=int(capacity),
                          token_bytes=int(d_model) * int(act_bytes))

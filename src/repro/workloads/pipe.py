@@ -60,4 +60,8 @@ def pipeline_p2p_pattern(cfg: ArchConfig, n_stages: int, n_microbatches: int,
     dst = np.repeat(stage_rank[1:], n_microbatches)
     size = np.full(src.size,
                    float(microbatch_tokens) * cfg.d_model * dtype_bytes)
-    return CommPattern(src=src, dst=dst, size=size, n_procs=n_procs)
+    # typed output validation: a bad config (negative token count, zero
+    # d_model) surfaces as a precise PatternError here, not as garbage
+    # pricing downstream
+    return CommPattern(src=src, dst=dst, size=size,
+                       n_procs=n_procs).validate(where="pipeline_p2p_pattern")

@@ -118,7 +118,9 @@ class SweepRow:
     ``model_winner`` is the model ladder's predicted strategy,
     ``sim_winner`` the simulator's ground truth, ``agree`` their match;
     ``model`` / ``sim`` are the winning costs in seconds; ``n_msgs`` /
-    ``total_bytes`` describe the derived phase itself.
+    ``total_bytes`` describe the derived phase itself.  ``degraded``
+    marks rows priced under a backend fallback (DESIGN.md §12) — the
+    numbers are still the numpy bit-identity reference's.
     """
 
     machine: str
@@ -131,26 +133,37 @@ class SweepRow:
     agree: bool
     model: float
     sim: float
+    degraded: bool = False
 
 
 def sweep(scenarios=DEFAULT_SCENARIOS, machines=None,
-          level: str = "contention", seed: int = 0) -> list[SweepRow]:
+          level: str = "contention", seed: int = 0,
+          validate: bool = True) -> list[SweepRow]:
     """Price every scenario phase on every machine in ONE arena call.
 
     Each scenario in ``scenarios`` is derived once (seeded per the workload
-    RNG contracts), bound to each machine in ``machines`` (default
+    RNG contracts), validated through the typed guard layer
+    (``validate=True``, the default — a NaN-sized or out-of-range derived
+    pattern raises a precise :class:`repro.comm.guard.PatternError` before
+    any pricing), bound to each machine in ``machines`` (default
     :func:`default_machines`), and the whole cross product goes through a
     single :func:`repro.comm.strategies.best_strategy_many` call — the
     mixed-machine candidate set stacks per machine group inside — at model
     ladder ``level`` with one arrival ``seed``.  Returns one
     :class:`SweepRow` per (machine, scenario, phase), machines in dict
-    order, scenarios in input order.
+    order, scenarios in input order; rows priced under a backend fallback
+    carry ``degraded=True``.
     """
     from repro.comm.strategies import best_strategy_many
 
     if machines is None:
         machines = default_machines()
     derived = [(sc, scenario_patterns(sc)) for sc in scenarios]
+    if validate:
+        from repro.comm.guard import validate_phase
+        for sc, phases in derived:
+            for label, pat in phases:
+                validate_phase(pat, where=f"{sc.name}/{label}")
     keys, bound = [], []
     for mname, machine in machines.items():
         for sc, phases in derived:
@@ -162,7 +175,7 @@ def sweep(scenarios=DEFAULT_SCENARIOS, machines=None,
                      n_msgs=pat.n_msgs, total_bytes=pat.total_bytes,
                      model_winner=v.model_winner, sim_winner=v.sim_winner,
                      agree=v.agree, model=v.model[v.model_winner],
-                     sim=v.sim[v.sim_winner])
+                     sim=v.sim[v.sim_winner], degraded=v.degraded)
             for (mname, sname, label, pat), v in zip(keys, verdicts)]
 
 

@@ -170,7 +170,8 @@ def tp_collective_patterns(cfg: ArchConfig, tp: int, tokens: int,
 
     def ring() -> CommPattern:
         return CommPattern(src=src.copy(), dst=dst.copy(), size=size.copy(),
-                           n_procs=n_procs)
+                           n_procs=n_procs).validate(
+                               where="tp_collective_patterns")
 
     return TpCollectives(reduce_scatter=ring(), all_gather=ring(),
                          payload_bytes=payload, n_ops=n_ops, tp=tp)

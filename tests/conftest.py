@@ -1,0 +1,30 @@
+"""Shared fixtures: isolate the per-process robustness state between tests.
+
+The comm stack keeps process-wide mutable state for its degradation
+machinery — the :class:`repro.comm.health.BackendHealth` ledger (failure
+events, quarantines, and the warn-once registry that replaced the old
+module-level ``_warned_*`` globals).  Without isolation a test that
+triggers a fallback warning or quarantines a backend silently changes
+the behaviour of every test after it; the autouse fixture below resets
+the registry around each test so warn-once / quarantine assertions are
+order-independent.
+"""
+import pytest
+
+from repro.comm import faults
+from repro.comm.health import reset_health
+
+
+@pytest.fixture(autouse=True)
+def _fresh_backend_health():
+    """Reset the process-wide BackendHealth ledger around every test.
+
+    The fault-injection env cache is cleared too: parsed ``FaultSpec``
+    objects carry fire counts, so two tests using the same
+    ``REPRO_FAULT_INJECT`` string must not share the parsed plan.
+    """
+    reset_health()
+    faults._env_cache.clear()
+    yield
+    reset_health()
+    faults._env_cache.clear()

@@ -203,11 +203,16 @@ def test_apply_validates_inputs():
         delta.apply([-1])
     with pytest.raises(ValueError, match="phase index"):
         delta.apply(None, {99: ([0], [1], [8.0])})
+    # added-message validation now runs through the typed guard layer:
+    # the errors are PatternError subclasses (still ValueErrors)
+    from repro.comm.guard import MessageSizeError, PatternError, RankError
     P = delta.phases[2].n_procs
-    with pytest.raises(ValueError, match="endpoints"):
+    with pytest.raises(RankError, match="out of range"):
         delta.apply(None, {2: ([0], [P], [8.0])})
-    with pytest.raises(ValueError, match="match in length"):
+    with pytest.raises(PatternError, match="lengths differ"):
         delta.apply(None, {2: ([0, 1], [2], [8.0])})
+    with pytest.raises(MessageSizeError, match="not finite"):
+        delta.apply(None, {2: ([0], [1], [np.nan])})
 
 
 # ------------------------------------------------------ consumers -----------

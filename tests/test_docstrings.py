@@ -21,11 +21,15 @@ import re
 import pytest
 
 import repro.comm.delta
+import repro.comm.faults
+import repro.comm.guard
+import repro.comm.health
 import repro.comm.phase
 import repro.comm.primitives
 import repro.comm.stack
 import repro.comm.strategies
 import repro.net.machine
+import repro.serve.strategy
 import repro.workloads.moe
 import repro.workloads.pipe
 import repro.workloads.registry
@@ -34,7 +38,8 @@ import repro.workloads.tp
 MODULES = [repro.comm.phase, repro.comm.primitives, repro.comm.stack,
            repro.comm.delta, repro.comm.strategies, repro.net.machine,
            repro.workloads.moe, repro.workloads.tp, repro.workloads.pipe,
-           repro.workloads.registry]
+           repro.workloads.registry, repro.comm.guard, repro.comm.faults,
+           repro.comm.health, repro.serve.strategy]
 
 #: Parameter names that need no mention: conventions, not API.
 IGNORED_PARAMS = {"self", "cls", "args", "kwargs", "kw"}

@@ -1,0 +1,386 @@
+"""The typed validation layer + adversarial patterns + StrategyService.
+
+Satellite coverage for ISSUE 8: :mod:`repro.comm.guard`'s ``PatternError``
+hierarchy at the unit level, its wiring through ``CommPhase.build`` /
+``CommPattern`` / the workload derivers, degenerate and adversarial
+patterns across all four machine presets (typed rejection or bit-identical
+numpy-fallback pricing), the :meth:`repro.comm.PhaseStack._dev`
+int32-overflow degradation, and the never-fail
+:class:`repro.serve.StrategyService` front end.
+"""
+import numpy as np
+import pytest
+
+from repro.comm.faults import inject
+from repro.comm.guard import (INT32_MAX, ArenaOverflowError,
+                              MessageSizeError, PatternError, RankError,
+                              validate_messages, validate_phase)
+from repro.comm.health import get_health
+from repro.kernels import comm_stack as cs
+from repro.net.machine import (blue_waters_machine, frontier_machine,
+                               lassen_machine, tpu_v5e_machine)
+from repro.sparse.partition import CommPattern
+
+PRESETS = {
+    "blue_waters": blue_waters_machine((2, 1, 1)),
+    "tpu_v5e": tpu_v5e_machine((2, 2)),
+    "lassen": lassen_machine((2, 2, 2)),
+    "frontier": frontier_machine((2, 2, 2)),
+}
+
+requires_jax = pytest.mark.skipif(not cs.have_jax(), reason="needs jax")
+
+
+# -- validate_messages units --------------------------------------------------
+
+def test_error_hierarchy_is_valueerror():
+    for cls in (PatternError, MessageSizeError, RankError,
+                ArenaOverflowError):
+        assert issubclass(cls, ValueError)
+    for cls in (MessageSizeError, RankError, ArenaOverflowError):
+        assert issubclass(cls, PatternError)
+
+
+def test_empty_message_set_is_valid():
+    validate_messages(np.array([], dtype=np.int64),
+                      np.array([], dtype=np.int64),
+                      np.array([], dtype=np.float64), n_procs=4)
+
+
+def test_rejects_non_1d_and_mismatched_lengths():
+    with pytest.raises(PatternError, match="one-dimensional"):
+        validate_messages(np.zeros((2, 2)), np.zeros(4), np.zeros(4))
+    with pytest.raises(PatternError, match="lengths differ"):
+        validate_messages(np.zeros(3, dtype=int), np.zeros(4, dtype=int),
+                          np.zeros(4))
+
+
+def test_rejects_bad_ranks_with_offending_index():
+    size = np.ones(3)
+    with pytest.raises(RankError, match=r"src\[1\] = -2 is negative"):
+        validate_messages(np.array([0, -2, 1]), np.array([1, 1, 1]), size,
+                          n_procs=4)
+    with pytest.raises(RankError, match=r"dst\[2\] = 4 is out of range"):
+        validate_messages(np.array([0, 1, 1]), np.array([1, 1, 4]), size,
+                          n_procs=4)
+    with pytest.raises(RankError, match="not an integral rank"):
+        validate_messages(np.array([0.0, 1.5]), np.array([1, 1]), np.ones(2),
+                          n_procs=4)
+    with pytest.raises(RankError, match="not an integral rank"):
+        validate_messages(np.array([0.0, np.nan]), np.array([1, 1]),
+                          np.ones(2), n_procs=4)
+    with pytest.raises(RankError, match="n_procs must be >= 1"):
+        validate_messages(np.array([0]), np.array([0]), np.ones(1),
+                          n_procs=0)
+
+
+def test_rejects_bad_sizes_with_offending_index():
+    src = np.array([0, 1])
+    dst = np.array([1, 0])
+    with pytest.raises(MessageSizeError, match=r"size\[1\] = nan"):
+        validate_messages(src, dst, np.array([1.0, np.nan]), n_procs=2)
+    with pytest.raises(MessageSizeError, match="not finite"):
+        validate_messages(src, dst, np.array([np.inf, 1.0]), n_procs=2)
+    with pytest.raises(MessageSizeError, match="is negative"):
+        validate_messages(src, dst, np.array([1.0, -8.0]), n_procs=2)
+
+
+def test_int32_overflow_is_typed():
+    big = INT32_MAX + 1
+    with pytest.raises(ArenaOverflowError, match="int32 range"):
+        validate_messages(np.array([big]), np.array([0]), np.ones(1),
+                          n_procs=big + 1)
+    # just inside the range is fine (no pricing here — validation only)
+    validate_messages(np.array([INT32_MAX - 1]), np.array([0]), np.ones(1),
+                      n_procs=INT32_MAX)
+
+
+def test_where_labels_error_text():
+    with pytest.raises(RankError, match="my-scenario/dispatch"):
+        validate_messages(np.array([-1]), np.array([0]), np.ones(1),
+                          where="my-scenario/dispatch")
+
+
+def test_validate_phase_duck_types():
+    pat = CommPattern(src=np.array([5]), dst=np.array([0]),
+                      size=np.ones(1), n_procs=4)
+    with pytest.raises(RankError, match="CommPattern: src"):
+        validate_phase(pat)
+    with pytest.raises(RankError, match="labelled: src"):
+        validate_phase(pat, where="labelled")
+
+
+# -- wiring: build / bind / derivers ------------------------------------------
+
+def test_comm_phase_build_validates():
+    from repro.comm.phase import CommPhase
+    m = PRESETS["lassen"]
+    with pytest.raises(MessageSizeError, match="CommPhase.build"):
+        CommPhase.build(m, [0], [1], [np.nan], validate=True)
+    # default stays permissive: NaN was silently cast before this PR and
+    # callers opt in to the typed layer
+    CommPhase.build(m, [0], [1], [8.0], validate=True)
+
+
+def test_pattern_validate_chains_and_bind_threads():
+    good = CommPattern(src=np.array([0]), dst=np.array([1]),
+                       size=np.ones(1), n_procs=4)
+    assert good.validate() is good
+    bad = CommPattern(src=np.array([0]), dst=np.array([9]),
+                      size=np.ones(1), n_procs=4)
+    with pytest.raises(RankError):
+        bad.validate()
+    with pytest.raises(RankError):
+        bad.bind(PRESETS["lassen"], validate=True)
+
+
+def test_phase_cost_and_simulate_validate():
+    from repro.core.models import phase_cost
+    from repro.net.simulator import simulate_phase
+    m = PRESETS["lassen"]
+    loc = np.zeros(1, dtype=bool)
+    with pytest.raises(MessageSizeError, match="phase_cost"):
+        phase_cost(m.params, [0], [1], [-1.0], loc, validate=True)
+    with pytest.raises(MessageSizeError):
+        simulate_phase(m, [0], [1], [np.inf], validate=True)
+
+
+def test_workload_derivers_validate_their_output():
+    from repro.configs import get_config
+    from repro.workloads.pipe import pipeline_p2p_pattern
+    from repro.workloads.tp import tp_collective_patterns
+    cfg = get_config("llama3.2-3b")
+    with pytest.raises(MessageSizeError, match="pipeline_p2p_pattern"):
+        pipeline_p2p_pattern(cfg, 4, 2, microbatch_tokens=-64)
+    with pytest.raises(MessageSizeError, match="tp_collective_patterns"):
+        tp_collective_patterns(cfg, 8, tokens=-2048)
+    # clean derivations still validate quietly
+    pipeline_p2p_pattern(cfg, 4, 2, microbatch_tokens=64)
+    tp_collective_patterns(cfg, 8, tokens=2048)
+
+
+def test_moe_deriver_validates_its_output():
+    from repro.workloads.moe import pattern_from_counts
+    counts = np.array([[0, 3], [2, 0]])
+    out = pattern_from_counts(counts, d_model=16, capacity=4)
+    validate_phase(out.dispatch)
+    validate_phase(out.combine)
+
+
+# -- satellite d: degenerate/adversarial patterns on every preset -------------
+
+def _degenerates(P):
+    e = np.array([], dtype=np.int64)
+    return {
+        "empty": (e, e, np.array([], dtype=np.float64)),
+        "zero_size": ([0, 1], [1, 0], [0.0, 0.0]),
+        "self_messages": ([0, 1, 2], [0, 1, 2], [8.0, 8.0, 8.0]),
+        "max_rank": ([0, P - 1], [P - 1, 0], [64.0, 64.0]),
+    }
+
+
+@pytest.mark.parametrize("preset", sorted(PRESETS))
+def test_degenerate_patterns_price_on_every_preset(preset):
+    from repro.comm.strategies import best_strategy
+    m = PRESETS[preset]
+    for name, (src, dst, size) in _degenerates(m.n_procs).items():
+        pat = CommPattern(src=np.asarray(src, dtype=np.int64),
+                          dst=np.asarray(dst, dtype=np.int64),
+                          size=np.asarray(size, dtype=np.float64),
+                          n_procs=m.n_procs)
+        pat.validate(where=name)                    # degenerate, not invalid
+        v = best_strategy(pat, m, backend="numpy", validate=True)
+        assert np.isfinite(v.model[v.model_winner]), (preset, name)
+        assert not v.degraded
+
+
+@pytest.mark.parametrize("preset", sorted(PRESETS))
+def test_adversarial_patterns_rejected_typed_on_every_preset(preset):
+    from repro.comm.strategies import best_strategy
+    m = PRESETS[preset]
+    P = m.n_procs
+    adversarial = {
+        "rank_past_end": ([0, P], [1, 0], [8.0, 8.0], RankError),
+        "negative_rank": ([0, -1], [1, 0], [8.0, 8.0], RankError),
+        "nan_size": ([0, 1], [1, 0], [8.0, np.nan], MessageSizeError),
+        "negative_size": ([0, 1], [1, 0], [8.0, -8.0], MessageSizeError),
+        "rank_past_int32": ([0, INT32_MAX + 1], [1, 0], [8.0, 8.0],
+                            RankError),
+    }
+    for name, (src, dst, size, err) in adversarial.items():
+        pat = CommPattern(src=np.asarray(src, dtype=np.int64),
+                          dst=np.asarray(dst, dtype=np.int64),
+                          size=np.asarray(size, dtype=np.float64),
+                          n_procs=P)
+        with pytest.raises(err):
+            best_strategy(pat, m, backend="numpy", validate=True)
+
+
+@requires_jax
+@pytest.mark.parametrize("preset", sorted(PRESETS))
+def test_degenerate_patterns_fault_fallback_bit_identical(preset):
+    """Under total device-site failure the degenerate patterns still price,
+    bit-identical to the clean numpy reference, on every preset."""
+    from repro.comm.strategies import best_strategy
+    m = PRESETS[preset]
+    for name, (src, dst, size) in _degenerates(m.n_procs).items():
+        pat = CommPattern(src=np.asarray(src, dtype=np.int64),
+                          dst=np.asarray(dst, dtype=np.int64),
+                          size=np.asarray(size, dtype=np.float64),
+                          n_procs=m.n_procs)
+        clean = best_strategy(pat, m, backend="numpy")
+        with inject("*", "raise"):
+            chaos = best_strategy(pat, m, backend="jax")
+        assert chaos.model == clean.model, (preset, name)
+        assert chaos.sim == clean.sim, (preset, name)
+        get_health().reset()                        # fresh quarantine state
+
+
+# -- satellite a: int32-overflow arenas degrade, not crash --------------------
+
+def test_dev_overflow_raises_typed_error():
+    from repro.comm.phase import CommPhase
+    from repro.comm.stack import as_stack
+    if not cs.have_jax():
+        pytest.skip("needs jax")
+    m = PRESETS["lassen"]
+    phases = [CommPhase.build(m, [0, 1], [1, 0], [8.0, 8.0]),
+              CommPhase.build(m, [2, 3], [3, 2], [8.0, 8.0])]
+    stack = as_stack(phases)
+    object.__setattr__(stack, "huge_col",
+                       np.array([2 ** 31, 0], dtype=np.int64))
+    with pytest.raises(ArenaOverflowError, match="int32 range"):
+        stack._dev("huge_col")
+    object.__setattr__(stack, "ok_col",
+                       np.array([2 ** 31 - 1, -2 ** 31], dtype=np.int64))
+    assert stack._dev("ok_col").dtype == np.int32
+
+
+@requires_jax
+def test_overflow_routes_through_degradation_mid_sweep(monkeypatch):
+    from repro.comm.phase import CommPhase
+    from repro.comm.stack import as_stack
+    m = PRESETS["lassen"]
+    phases = [CommPhase.build(m, [0, 1], [1, 0], [8.0, 8.0]),
+              CommPhase.build(m, [2, 3], [3, 2], [8.0, 8.0])]
+    stack = as_stack(phases)
+
+    def overflow(*a, **kw):
+        raise ArenaOverflowError("arena column '_src_key' exceeds int32")
+
+    monkeypatch.setattr(type(stack), "_device_cost_dense", overflow)
+    t_np, q_np, b_np = stack.cost_arrays(backend="numpy")
+    t, q, b = stack.cost_arrays(backend="jax")
+    np.testing.assert_array_equal(t, t_np)
+    np.testing.assert_array_equal(q, q_np)
+    np.testing.assert_array_equal(b, b_np)
+    events = get_health().events_for("jax", "stack.device_store")
+    assert events and "ArenaOverflowError" in events[0].error
+
+
+# -- the StrategyService front end --------------------------------------------
+
+def _service_patterns(P):
+    good = CommPattern(src=np.array([0, 1]), dst=np.array([1, 0]),
+                       size=np.array([64.0, 64.0]), n_procs=P)
+    bad = CommPattern(src=np.array([0, P]), dst=np.array([1, 0]),
+                      size=np.array([64.0, 64.0]), n_procs=P)
+    return good, bad
+
+
+def test_service_imports_without_touching_jax():
+    import os
+    import subprocess
+    import sys
+    env = dict(os.environ, PYTHONPATH="src")
+    code = ("import sys; from repro.serve import StrategyService, "
+            "ServiceResult; assert 'jax' not in sys.modules, "
+            "'StrategyService import pulled in jax'")
+    subprocess.run([sys.executable, "-c", code], check=True,
+                   cwd=os.path.dirname(os.path.dirname(__file__)))
+
+
+def test_service_rejects_bad_patterns_individually():
+    from repro.serve import StrategyService
+    m = PRESETS["lassen"]
+    good, bad = _service_patterns(m.n_procs)
+    svc = StrategyService(m, backend="numpy")
+    results = svc.query_many([good, bad, good])
+    assert [r.ok for r in results] == [True, False, True]
+    assert isinstance(results[1].error, RankError)
+    assert "query[1]" in str(results[1].error)
+    assert results[0].verdict.model_winner == results[2].verdict.model_winner
+    single = svc.query(bad)
+    assert not single.ok and isinstance(single.error, PatternError)
+
+
+@requires_jax
+def test_service_degrades_and_never_raises():
+    from repro.serve import StrategyService
+    m = PRESETS["lassen"]
+    good, bad = _service_patterns(m.n_procs)
+    svc = StrategyService(m, backend="jax")
+    clean = StrategyService(m, backend="numpy").query(good)
+    with inject("*", "raise"):
+        res = svc.query_many([good, bad])
+    assert res[0].ok and res[0].degraded
+    assert res[0].verdict.model == clean.verdict.model
+    assert not res[1].ok
+    assert svc.health().n_events > 0
+
+
+def test_service_worst_case_retry_on_sweep_failure(monkeypatch):
+    from repro.comm import strategies
+    from repro.serve import StrategyService
+    m = PRESETS["lassen"]
+    good, _ = _service_patterns(m.n_procs)
+    real = strategies.best_strategy_many
+    calls = []
+
+    def flaky(patterns, machine=None, **kw):
+        calls.append(kw.get("backend"))
+        if kw.get("backend") != "numpy":
+            raise RuntimeError("sweep exploded")
+        return real(patterns, machine, **kw)
+
+    monkeypatch.setattr(strategies, "best_strategy_many", flaky)
+    svc = StrategyService(m, backend="jax")
+    res = svc.query(good)
+    assert res.ok and res.degraded
+    assert res.verdict.model_winner in res.verdict.model
+    assert calls == ["jax", "numpy"]
+    events = get_health().events_for(site="serve.query_many")
+    assert len(events) == 1
+
+
+def test_service_returns_error_result_when_even_numpy_fails(monkeypatch):
+    from repro.comm import strategies
+    from repro.serve import StrategyService
+    m = PRESETS["lassen"]
+    good, _ = _service_patterns(m.n_procs)
+
+    def always_fails(*a, **kw):
+        raise RuntimeError("everything is broken")
+
+    monkeypatch.setattr(strategies, "best_strategy_many", always_fails)
+    svc = StrategyService(m)
+    res = svc.query(good)                           # must not raise
+    assert not res.ok and res.degraded
+    assert isinstance(res.error, RuntimeError)
+    assert len(get_health().events_for(site="serve.query_many")) == 2
+
+
+def test_serve_engine_submit_validates():
+    pytest.importorskip("jax")
+    from repro.serve.engine import Request, ServeEngine
+    eng = object.__new__(ServeEngine)               # validation needs no jit
+    eng.max_seq = 8
+    eng.queue = __import__("collections").deque()
+    with pytest.raises(ValueError, match="prompt must be non-empty"):
+        eng.submit(Request(uid=0, prompt=[]))
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit(Request(uid=1, prompt=[1], max_new_tokens=0))
+    with pytest.raises(ValueError, match="max_seq"):
+        eng.submit(Request(uid=2, prompt=list(range(8))))
+    eng.submit(Request(uid=3, prompt=[1, 2]))
+    assert len(eng.queue) == 1

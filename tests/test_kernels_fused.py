@@ -297,7 +297,8 @@ def test_build_streaming_rejects_bad_chunk_and_empty_ok():
 
 
 def test_deprecated_one_hot_shim_still_importable():
+    from repro.comm.health import reset_health
     assert cs.PALLAS_ONE_HOT_LIMIT == 1 << 24
-    cs._warned_one_hot = False
+    reset_health()                       # clear the warn-once registry
     with pytest.warns(DeprecationWarning, match="fused scatter-accumulate"):
         assert cs.pallas_within_limit(1 << 30, 1 << 20) is True

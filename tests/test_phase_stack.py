@@ -358,9 +358,11 @@ def test_stack_backends_mirror_kernels():
 
 def test_pallas_one_hot_shim_warns_once_and_allows_everything():
     """The one-hot work ceiling is retired: the deprecation shim warns once
-    per process, then reports every size as within limit (the fused
-    scatter-accumulate kernel is O(messages), no reroute exists)."""
-    _cs._warned_one_hot = False
+    per process (via the resettable health registry), then reports every
+    size as within limit (the fused scatter-accumulate kernel is
+    O(messages), no reroute exists)."""
+    from repro.comm.health import reset_health
+    reset_health()                       # clear the warn-once registry
     with pytest.warns(DeprecationWarning, match="fused scatter-accumulate"):
         assert _cs.pallas_within_limit(1, 1)
     with warnings.catch_warnings():
