@@ -24,6 +24,15 @@ Two rows:
     time with the summed modeled cost reduction as ``derived`` — the
     optimization trace the quickstart example prints per level.
 
+``delta_service_qps``
+    Sustained service throughput: the full ``DEFAULT_SCENARIOS`` registry
+    priced through :class:`repro.serve.StrategyService` warm (every query
+    a fingerprint cache hit) vs cold (a fresh service re-running the
+    sweep per query).  Reported as warm us/query with ``derived`` the
+    cold/warm speedup; warm verdicts are asserted bit-identical to the
+    cold ones before timing counts, and the ``perf_smoke`` gate fails if
+    the cached path ever loses to the rebuild.
+
 Run directly for a CSV::
 
     PYTHONPATH=src python -m benchmarks.bench_delta
@@ -106,7 +115,38 @@ def bench_delta_amg_optimize():
     return [("delta_amg_optimize", us, reduction)]
 
 
-ALL_BENCHES = [bench_delta_local_search, bench_delta_amg_optimize]
+def bench_service_qps():
+    from repro.net import lassen_machine
+    from repro.serve import StrategyService
+    from repro.workloads.registry import DEFAULT_SCENARIOS, scenario_patterns
+
+    machine = lassen_machine((2, 2, 2))
+    pats = [p for sc in DEFAULT_SCENARIOS for _, p in scenario_patterns(sc)]
+
+    # correctness first: warm (cached) verdicts must be bit-identical to
+    # the cold sweep that populated them
+    svc = StrategyService(machine, backend="numpy")
+    cold_res = svc.query_many(pats)
+    warm_res = svc.query_many(pats)
+    assert all(r.cached for r in warm_res), "warm pass missed the cache"
+    for c, w in zip(cold_res, warm_res):
+        assert w.verdict.model == c.verdict.model, "cached verdict drifted"
+        assert w.verdict.sim == c.verdict.sim, "cached verdict drifted"
+
+    best_cold = best_warm = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        StrategyService(machine, backend="numpy").query_many(pats)
+        best_cold = min(best_cold, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        svc.query_many(pats)
+        best_warm = min(best_warm, time.perf_counter() - t0)
+    return [("delta_service_qps", best_warm / len(pats) * 1e6,
+             best_cold / best_warm)]
+
+
+ALL_BENCHES = [bench_delta_local_search, bench_delta_amg_optimize,
+               bench_service_qps]
 
 
 if __name__ == "__main__":

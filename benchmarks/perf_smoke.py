@@ -12,6 +12,11 @@ regression still trips it:
   (incremental re-pricing vs rebuild-per-candidate on the same 64-move
   local search, candidate costs asserted allclose inside the bench) — the
   DeltaStack path must never be slower than a full rebuild (>= 1.0x);
+* the ``delta_service_qps`` row of the same bench (the full scenario
+  registry through a warm :class:`repro.serve.StrategyService` vs a cold
+  rebuild per query, cached verdicts asserted bit-identical inside the
+  bench) — the fingerprint cache must never lose to re-running the sweep
+  (>= 1.0x; in practice the hit path is orders of magnitude ahead);
 * the ``stack_auto_*`` rows of :mod:`benchmarks.bench_stack_backends` —
   the autotuned backend default must never pick a backend slower than
   numpy.  On a host whose crossover probe reports ``inf`` (CPU-only jax,
@@ -47,7 +52,7 @@ from __future__ import annotations
 import sys
 
 STACK_ROWS = ("stack_model_ladder", "stack_simulate", "stack_best_strategy")
-DELTA_ROWS = ("delta_local_search_64",)
+DELTA_ROWS = ("delta_local_search_64", "delta_service_qps")
 #: autotuned-default rows: same-code-path comparison -> noise-floor gate
 AUTO_ROWS = ("stack_auto_small", "stack_auto_large")
 #: fused-kernel-vs-retired-one-hot row: present only where jax imports
@@ -69,6 +74,7 @@ _REF = {**{n: ("loop", "us/sweep") for n in STACK_ROWS},
         **{n: ("numpy", "us/eval") for n in AUTO_ROWS},
         **{n: ("one-hot", "us/reduce") for n in JAX_ROWS},
         **{n: ("loop", "us/sweep") for n in LLM_ROWS}}
+_REF["delta_service_qps"] = ("rebuild", "us/query")
 
 
 def _rows_from_csv(path: str):
@@ -89,11 +95,12 @@ def main() -> None:
     if len(sys.argv) > 1:
         rows = _rows_from_csv(sys.argv[1])
     else:
-        from .bench_delta import bench_delta_local_search
+        from .bench_delta import bench_delta_local_search, bench_service_qps
         from .bench_kernels import bench_phase_stack
         from .bench_llm_workloads import bench_llm_workloads
         from .bench_stack_backends import bench_stack_backends
         rows = (bench_phase_stack() + bench_delta_local_search()
+                + bench_service_qps()
                 + [r for r in bench_stack_backends() if r[0] in GATED_ROWS]
                 + [r for r in bench_llm_workloads() if r[0] in GATED_ROWS])
     failed = False

@@ -16,6 +16,12 @@ point-to-point communication; the comm stack (``repro.comm`` +
 3. Print the winner table: which node-aware / GPU-aware strategy the model
    predicts per phase, and whether the simulator's verdict agrees (it
    should — ``tests/test_workloads_golden.py`` pins this exact table).
+4. Close the steering loop through the production service: optimize a
+   sparse-operator partition on lassen (``optimize_partition`` with
+   ``rerun_strategies=True``), then re-price the initial -> optimized
+   traffic drift incrementally with ``StrategyService.reprice`` — the
+   verdict must come back non-degraded (``tests/test_service_soak.py``
+   pins this flow).
 
     PYTHONPATH=src python examples/comm_model_llm.py
 """
@@ -54,7 +60,42 @@ def main():
           "keep\nthe standard strategy, with combine-side aggregation "
           "winning where the reversed\nhistogram concentrates traffic.  "
           "This is the paper's thesis on the repo's own\ntraffic: strategy "
-          "choice is machine x shape, and the model predicts it.")
+          "choice is machine x shape, and the model predicts it.\n")
+
+    # -- the steering loop: optimizer drift through the service -------------
+    steer_drift()
+
+
+def steer_drift():
+    """Optimize a partition on lassen, then reprice the traffic drift
+    incrementally through the production service."""
+    from repro.net import lassen_machine
+    from repro.serve import StrategyService
+    from repro.sparse import (RowPartition, optimize_partition, poisson_3d,
+                              spmv_comm_pattern)
+
+    machine = lassen_machine((2, 2, 2))
+    A, n_procs = poisson_3d(6), 16
+    res = optimize_partition(A, machine, n_procs=n_procs, moves=32, seed=0,
+                             rerun_strategies=True)
+    print(f"steering: poisson_3d(6) on lassen, {len(res.moves)} moves, "
+          f"{res.n_accepted} accepted, modeled cost "
+          f"{res.initial_cost * 1e6:.1f} -> {res.cost * 1e6:.1f} us "
+          f"({res.improvement:.2%} better); "
+          f"{len(res.verdicts)} per-move strategy verdicts")
+
+    svc = StrategyService(machine, backend="numpy")
+    initial = spmv_comm_pattern(A, RowPartition.balanced(A.n_rows, n_procs))
+    out = svc.reprice(initial, res.pattern)
+    assert out.ok and not out.degraded, out.error
+    print(f"service reprice (initial -> optimized drift): "
+          f"model winner {out.verdict.model_winner}, "
+          f"sim winner {out.verdict.sim_winner}, "
+          f"degraded={out.degraded}, cached={out.cached}")
+    again = svc.reprice(initial, res.pattern)
+    print(f"repeat reprice served from the fingerprint cache: "
+          f"cached={again.cached}, winners unchanged="
+          f"{again.verdict.sim_winner == out.verdict.sim_winner}")
 
 
 if __name__ == "__main__":

@@ -43,7 +43,8 @@ from .guard import (PatternError, MessageSizeError, RankError,
                     ArenaOverflowError, validate_messages, validate_phase)
 from .faults import (FaultSpec, InjectedFault, InjectedTimeout, inject,
                      SITES as FAULT_SITES, MODES as FAULT_MODES)
-from .health import BackendHealth, HealthEvent, get_health, reset_health
+from .health import (BackendHealth, CircuitBreaker, HealthEvent, get_health,
+                     reset_health)
 from .phase import CommPhase
 from .primitives import (active_senders_per_node, transport_times,
                          per_proc_sums, group_by_receiver, sum_by_pairs,
@@ -51,7 +52,8 @@ from .primitives import (active_senders_per_node, transport_times,
                          queue_traversal_steps,
                          batched_queue_traversal_steps)
 from .stack import PhaseStack, StackSimArrays, STACK_BACKENDS
-from .delta import ARENA_TYPES, DeltaStack
+from .delta import (ARENA_TYPES, DeltaStack, message_delta,
+                    pattern_fingerprint, phase_fingerprint)
 from .strategies import (STRATEGIES, GPU_STRATEGIES, StrategyPlan,
                          StrategyVerdict, strategies_for,
                          standard, two_step, three_step, host_staged,
@@ -62,6 +64,7 @@ from .strategies import (STRATEGIES, GPU_STRATEGIES, StrategyPlan,
 __all__ = [
     "CommPhase", "PhaseStack", "StackSimArrays", "STACK_BACKENDS",
     "DeltaStack", "ARENA_TYPES",
+    "message_delta", "pattern_fingerprint", "phase_fingerprint",
     "active_senders_per_node", "transport_times", "per_proc_sums",
     "group_by_receiver", "sum_by_pairs", "segmented_arange",
     "grouped_queue_steps",
@@ -76,5 +79,6 @@ __all__ = [
     "validate_messages", "validate_phase",
     "FaultSpec", "InjectedFault", "InjectedTimeout", "inject",
     "FAULT_SITES", "FAULT_MODES",
-    "BackendHealth", "HealthEvent", "get_health", "reset_health",
+    "BackendHealth", "CircuitBreaker", "HealthEvent", "get_health",
+    "reset_health",
 ]

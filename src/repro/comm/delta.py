@@ -62,13 +62,104 @@ prices.
 """
 from __future__ import annotations
 
+import hashlib
+
 import numpy as np
 
 from .phase import CommPhase
 from .primitives import transport_times
 from .stack import PhaseStack, StackSimArrays
 
-__all__ = ["DeltaStack", "ARENA_TYPES"]
+__all__ = ["DeltaStack", "ARENA_TYPES", "phase_fingerprint",
+           "pattern_fingerprint", "message_delta"]
+
+def phase_fingerprint(src, dst, size, n_procs) -> str:
+    """Content-hash of one phase's raw message arrays, as a hex string.
+
+    SHA-256 over a canonical byte stream: a version tag, ``n_procs`` and the
+    message count as int64, then the ``src`` / ``dst`` endpoint arrays as
+    int64 and the ``size`` array as float64, **in message order**.  The hash
+    is deliberately order-sensitive: simulator verdicts depend on message
+    order (per-candidate seeded arrival streams), so two phases that differ
+    only by a permutation must *not* share a cache entry.  Used by the
+    strategy service's arena cache to key priced arenas.
+    """
+    src = np.ascontiguousarray(src, dtype=np.int64)
+    dst = np.ascontiguousarray(dst, dtype=np.int64)
+    size = np.ascontiguousarray(size, dtype=np.float64)
+    h = hashlib.sha256()
+    h.update(b"repro.phase.v1")
+    h.update(np.asarray([int(n_procs), src.size], dtype=np.int64).tobytes())
+    h.update(src.tobytes())
+    h.update(dst.tobytes())
+    h.update(size.tobytes())
+    return h.hexdigest()
+
+
+def pattern_fingerprint(pattern) -> str:
+    """Content-hash of a :class:`repro.sparse.CommPattern`, as a hex string.
+
+    Delegates to :func:`phase_fingerprint` over ``pattern``'s raw
+    ``src`` / ``dst`` / ``size`` arrays and ``n_procs`` — anything with
+    those four attributes (a ``CommPattern``, a bound ``CommPhase``) hashes
+    identically, so a cache keyed on the unbound pattern hits for its bound
+    phase too.
+    """
+    return phase_fingerprint(pattern.src, pattern.dst, pattern.size,
+                             pattern.n_procs)
+
+
+def message_delta(old, new):
+    """The multiset message diff turning pattern ``old`` into pattern ``new``.
+
+    Both ``old`` and ``new`` expose raw ``src`` / ``dst`` / ``size`` arrays
+    (``CommPattern`` or bound ``CommPhase``).  Returns
+    ``(removed_idx, (src, dst, size))`` suitable for
+    :meth:`DeltaStack.apply` on a single-phase arena built from ``old``:
+    ``removed_idx`` are message indices into ``old``'s order, the added
+    arrays are the messages of ``new`` not covered by ``old``.
+
+    Messages match as exact ``(src, dst, size)`` triples, multiset-style:
+    when a triple appears ``a`` times in ``old`` and ``b`` times in ``new``,
+    ``min(a, b)`` copies survive.  Removals take the *last* duplicate
+    occurrences so the earliest survivors keep their slots, matching the
+    canonical mutated order ``DeltaStack.apply`` produces (survivors in
+    place, additions appended).  Note the resulting order is that canonical
+    order, not ``new``'s own order — fingerprint the applied arena's phase,
+    not ``new``, when caching the result.
+    """
+    os_ = np.asarray(old.src, dtype=np.int64).ravel()
+    od = np.asarray(old.dst, dtype=np.int64).ravel()
+    oz = np.asarray(old.size, dtype=np.float64).ravel()
+    ns = np.asarray(new.src, dtype=np.int64).ravel()
+    nd = np.asarray(new.dst, dtype=np.int64).ravel()
+    nz = np.asarray(new.size, dtype=np.float64).ravel()
+    n_old, n_new = os_.size, ns.size
+    rec = np.empty(n_old + n_new, dtype=[("s", np.int64), ("d", np.int64),
+                                         ("z", np.float64)])
+    rec["s"] = np.concatenate([os_, ns])
+    rec["d"] = np.concatenate([od, nd])
+    rec["z"] = np.concatenate([oz, nz])
+    _, inv = np.unique(rec, return_inverse=True)
+    inv = inv.ravel()                      # numpy 2.x keeps input shape
+    inv_old, inv_new = inv[:n_old], inv[n_old:]
+    n_groups = int(inv.max(initial=-1)) + 1
+    c_old = np.bincount(inv_old, minlength=n_groups)
+    c_new = np.bincount(inv_new, minlength=n_groups)
+    keep = np.minimum(c_old, c_new)
+
+    def _ranks(invs, counts):
+        # within-group occurrence rank, stable in original message order
+        order = np.argsort(invs, kind="stable")
+        starts = np.r_[0, np.cumsum(counts)[:-1]]
+        r = np.empty(invs.size, dtype=np.int64)
+        r[order] = np.arange(invs.size) - starts[invs[order]]
+        return r
+
+    removed = np.nonzero(_ranks(inv_old, c_old) >= keep[inv_old])[0]
+    add = _ranks(inv_new, c_new) >= keep[inv_new]
+    return removed, (ns[add], nd[add], nz[add])
+
 
 #: The (node_aware, use_maxrate) flag pairs the model ladder prices.  The
 #: ladder's five levels collapse onto these three transport passes (postal /
@@ -519,6 +610,23 @@ class DeltaStack:
 
     def __iter__(self):
         return iter(self.phases)
+
+    def fingerprint(self) -> str:
+        """Content-hash of the arena's current phases, as a hex string.
+
+        SHA-256 over the per-phase :func:`phase_fingerprint` digests in
+        phase order — so a ``DeltaStack`` and a fresh arena over the same
+        phases (same message order) hash identically, and any ``apply``
+        changes the fingerprint.  This is the cache key the strategy
+        service's :class:`repro.serve.ArenaCache` stores priced verdicts
+        under.
+        """
+        h = hashlib.sha256()
+        h.update(b"repro.delta.v1")
+        for ph in self.phases:
+            h.update(bytes.fromhex(
+                phase_fingerprint(ph.src, ph.dst, ph.size, ph.n_procs)))
+        return h.hexdigest()
 
     # -- mutation -------------------------------------------------------------
     def apply(self, removed_idx=None, added=None, *,

@@ -17,6 +17,9 @@ Sites (:data:`SITES`):
 ``autotune.probe``          the live numpy/jax crossover probe
 ``autotune.cache_read``     autotune disk-cache read
 ``autotune.cache_write``    autotune disk-cache write
+``serve.cache_read``        strategy-service arena-cache read
+``serve.cache_write``       strategy-service arena-cache write
+``serve.deadline``          strategy-service per-request deadline check
 ==========================  =================================================
 
 Modes (:data:`MODES`): ``raise`` (an :class:`InjectedFault`), ``timeout``
@@ -66,6 +69,9 @@ SITES = (
     "autotune.probe",
     "autotune.cache_read",
     "autotune.cache_write",
+    "serve.cache_read",
+    "serve.cache_write",
+    "serve.deadline",
 )
 
 #: Injection modes: raise / timeout fire at :func:`fail_point`, nan /

@@ -1,15 +1,26 @@
 """Serving layer: the batched decode engine and the strategy query service.
 
 :class:`ServeEngine` / :class:`Request` (in :mod:`repro.serve.engine`)
-need jax; :class:`StrategyService` / :class:`ServiceResult` (in
-:mod:`repro.serve.strategy`) are numpy-only.  Imports are lazy per
-attribute so ``from repro.serve import StrategyService`` works on hosts
-without jax.
+need jax — imported lazily at engine construction, so touching them on a
+numpy-only host raises one clear error instead of an import crash.
+:class:`StrategyService` / :class:`ServiceResult` (in
+:mod:`repro.serve.strategy`), the admission layer
+(:class:`AdmissionQueue` / :class:`Deadline` / :class:`RetryPolicy` and
+the typed :class:`Overloaded` / :class:`DeadlineExceeded` errors, in
+:mod:`repro.serve.admission`) and the crash-consistent
+:class:`ArenaCache` (:mod:`repro.serve.cache`) are numpy-only.  Imports
+are lazy per attribute so ``from repro.serve import StrategyService``
+works on hosts without jax.
 """
-__all__ = ["ServeEngine", "Request", "StrategyService", "ServiceResult"]
+__all__ = ["ServeEngine", "Request", "StrategyService", "ServiceResult",
+           "AdmissionQueue", "Deadline", "RetryPolicy", "Overloaded",
+           "DeadlineExceeded", "ArenaCache"]
 
 _ENGINE = ("ServeEngine", "Request")
 _STRATEGY = ("StrategyService", "ServiceResult")
+_ADMISSION = ("AdmissionQueue", "Deadline", "RetryPolicy", "Overloaded",
+              "DeadlineExceeded")
+_CACHE = ("ArenaCache",)
 
 
 def __getattr__(name):
@@ -19,6 +30,12 @@ def __getattr__(name):
     if name in _STRATEGY:
         from . import strategy
         return getattr(strategy, name)
+    if name in _ADMISSION:
+        from . import admission
+        return getattr(admission, name)
+    if name in _CACHE:
+        from . import cache
+        return getattr(cache, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 

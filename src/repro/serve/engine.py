@@ -5,18 +5,43 @@ free slots (prefill), and decode proceeds for the whole batch every step
 (continuous-batching-lite: finished slots are refilled between steps without
 stopping the batch).  CPU-runnable with smoke configs; the same
 ``decode_step`` is what the dry-run lowers at production shapes.
+
+jax is imported lazily, at :class:`ServeEngine` construction: importing
+this module (or touching ``repro.serve.ServeEngine``) on a numpy-only host
+works, and building an engine there fails with one clear ``RuntimeError``
+instead of an import-time crash at package-attribute access.
 """
 from __future__ import annotations
 
 import dataclasses
+import typing
 from collections import deque
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.nn.config import ArchConfig
-from repro.nn import model as M
+if typing.TYPE_CHECKING:               # repro.nn pulls in jax at import time
+    from repro.nn.config import ArchConfig
+
+jax = jnp = M = None       # bound by _require_jax at first engine construction
+
+
+def _require_jax() -> None:
+    """Bind the module's ``jax`` / ``jnp`` / model globals, or raise a
+    clear ``RuntimeError`` on hosts without jax (the numpy-only
+    :class:`repro.serve.StrategyService` is unaffected)."""
+    global jax, jnp, M
+    if jax is not None:
+        return
+    try:
+        import jax as _jax
+        import jax.numpy as _jnp
+        from repro.nn import model as _M
+    except ImportError as e:
+        raise RuntimeError(
+            "ServeEngine needs jax, which is not importable on this host; "
+            "install jax or use the numpy-only repro.serve.StrategyService"
+        ) from e
+    jax, jnp, M = _jax, _jnp, _M
 
 
 @dataclasses.dataclass
@@ -32,6 +57,7 @@ class Request:
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, batch_slots: int = 4,
                  max_seq: int = 128, greedy: bool = True):
+        _require_jax()
         self.cfg = cfg
         self.params = params
         self.B = batch_slots

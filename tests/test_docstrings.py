@@ -29,6 +29,8 @@ import repro.comm.primitives
 import repro.comm.stack
 import repro.comm.strategies
 import repro.net.machine
+import repro.serve.admission
+import repro.serve.cache
 import repro.serve.strategy
 import repro.workloads.moe
 import repro.workloads.pipe
@@ -39,7 +41,8 @@ MODULES = [repro.comm.phase, repro.comm.primitives, repro.comm.stack,
            repro.comm.delta, repro.comm.strategies, repro.net.machine,
            repro.workloads.moe, repro.workloads.tp, repro.workloads.pipe,
            repro.workloads.registry, repro.comm.guard, repro.comm.faults,
-           repro.comm.health, repro.serve.strategy]
+           repro.comm.health, repro.serve.strategy,
+           repro.serve.admission, repro.serve.cache]
 
 #: Parameter names that need no mention: conventions, not API.
 IGNORED_PARAMS = {"self", "cls", "args", "kwargs", "kw"}

@@ -27,7 +27,8 @@ requires_jax = pytest.mark.skipif(not cs.have_jax(), reason="needs jax")
 def test_site_and_mode_registries():
     assert set(faults.SITES) == {
         "kernel.segment_reduce", "kernel.queue_walk", "stack.device_store",
-        "autotune.probe", "autotune.cache_read", "autotune.cache_write"}
+        "autotune.probe", "autotune.cache_read", "autotune.cache_write",
+        "serve.cache_read", "serve.cache_write", "serve.deadline"}
     assert set(faults.MODES) == {"raise", "timeout", "nan", "corrupt"}
 
 

@@ -370,6 +370,35 @@ def test_service_returns_error_result_when_even_numpy_fails(monkeypatch):
     assert len(get_health().events_for(site="serve.query_many")) == 2
 
 
+def test_serve_engine_import_is_jax_free_and_error_is_clear():
+    """`import repro.serve.engine` (and ServeEngine itself) must work on a
+    host with no jax at all; only *constructing* the engine may demand it,
+    with an actionable message.  Runs in a subprocess with jax blocked via
+    a meta-path hook so the check is real even on this jax-equipped host."""
+    import os
+    import subprocess
+    import sys
+    code = (
+        "import sys\n"
+        "class _NoJax:\n"
+        "    def find_spec(self, name, path=None, target=None):\n"
+        "        if name == 'jax' or name.startswith('jax.'):\n"
+        "            raise ImportError('jax is blocked in this test')\n"
+        "        return None\n"
+        "sys.meta_path.insert(0, _NoJax())\n"
+        "from repro.serve import ServeEngine, Request\n"
+        "assert 'jax' not in sys.modules\n"
+        "try:\n"
+        "    ServeEngine(cfg=None, params=None, max_seq=8)\n"
+        "except RuntimeError as e:\n"
+        "    assert 'jax' in str(e) and 'StrategyService' in str(e), e\n"
+        "else:\n"
+        "    raise SystemExit('ServeEngine built without jax?!')\n")
+    env = dict(os.environ, PYTHONPATH="src")
+    subprocess.run([sys.executable, "-c", code], check=True, env=env,
+                   cwd=os.path.dirname(os.path.dirname(__file__)))
+
+
 def test_serve_engine_submit_validates():
     pytest.importorskip("jax")
     from repro.serve.engine import Request, ServeEngine

@@ -1,0 +1,333 @@
+"""Fingerprints, the crash-consistent ArenaCache, and drift repricing.
+
+Pins DESIGN.md §13's cache contract: content-hash pattern fingerprints
+(:func:`repro.comm.pattern_fingerprint` — deliberately order-sensitive),
+multiset message diffs (:func:`repro.comm.message_delta`) feeding
+:meth:`repro.comm.DeltaStack.apply`, atomic checksummed on-disk entries
+that degrade to a rebuild under corruption / version skew / injected I/O
+faults (never an error), ``snapshot()``/``restore()`` warm restarts, and
+the :class:`repro.serve.StrategyService` integration: cache-hit verdicts
+bit-identical to fresh sweeps, and :meth:`StrategyService.reprice` pricing
+drift incrementally with a full-rebuild fallback.
+"""
+import glob
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.comm import (DeltaStack, faults, message_delta,
+                        pattern_fingerprint, phase_fingerprint)
+from repro.comm.health import get_health
+from repro.net.machine import lassen_machine
+from repro.serve import ArenaCache, StrategyService
+from repro.serve.cache import CACHE_VERSION
+from repro.sparse.partition import CommPattern
+
+LASSEN = lassen_machine((2, 2, 2))
+
+
+def _pattern(P, n=40, seed=0):
+    rng = np.random.default_rng(seed)
+    return CommPattern(src=rng.integers(0, P, n), dst=rng.integers(0, P, n),
+                       size=rng.integers(64, 4096, n).astype(float),
+                       n_procs=P)
+
+
+def _drift(pat, keep, extra, seed=99):
+    """A drifted copy of ``pat``: first ``keep`` messages plus ``extra``
+    fresh ones."""
+    rng = np.random.default_rng(seed)
+    P = pat.n_procs
+    return CommPattern(
+        src=np.concatenate([pat.src[:keep], rng.integers(0, P, extra)]),
+        dst=np.concatenate([pat.dst[:keep], rng.integers(0, P, extra)]),
+        size=np.concatenate([pat.size[:keep],
+                             rng.integers(64, 4096, extra).astype(float)]),
+        n_procs=P)
+
+
+# ============================================================ fingerprints ==
+def test_fingerprint_is_content_hash():
+    pat = _pattern(64)
+    f = pattern_fingerprint(pat)
+    assert f == pattern_fingerprint(_pattern(64))       # same content
+    assert f == phase_fingerprint(pat.src, pat.dst, pat.size, pat.n_procs)
+    assert len(f) == 64 and int(f, 16) >= 0             # hex sha256
+    # bound phase hashes like its unbound pattern
+    assert pattern_fingerprint(pat.bind(LASSEN)) == f
+
+
+def test_fingerprint_is_order_sensitive():
+    """Simulator verdicts depend on message order (seeded per-candidate
+    arrival streams), so permuted phases must not share a cache entry."""
+    pat = _pattern(64)
+    perm = np.random.default_rng(1).permutation(pat.n_msgs)
+    shuffled = CommPattern(src=pat.src[perm], dst=pat.dst[perm],
+                           size=pat.size[perm], n_procs=pat.n_procs)
+    assert pattern_fingerprint(shuffled) != pattern_fingerprint(pat)
+    # any single-field change moves the hash too
+    bigger = CommPattern(src=pat.src, dst=pat.dst, size=pat.size * 2.0,
+                         n_procs=pat.n_procs)
+    assert pattern_fingerprint(bigger) != pattern_fingerprint(pat)
+    wider = CommPattern(src=pat.src, dst=pat.dst, size=pat.size,
+                        n_procs=pat.n_procs + 1)
+    assert pattern_fingerprint(wider) != pattern_fingerprint(pat)
+
+
+def test_delta_stack_fingerprint_tracks_mutations():
+    pat = _pattern(64)
+    arena = DeltaStack.from_phases([pat.bind(LASSEN)])
+    f0 = arena.fingerprint()
+    assert f0 == DeltaStack.from_phases([pat.bind(LASSEN)]).fingerprint()
+    mutated = arena.apply([0, 1], {0: ([3], [5], [256.0])})
+    assert mutated.fingerprint() != f0
+    ph = mutated.phases[0]
+    assert mutated.fingerprint() == DeltaStack.from_phases(
+        [ph]).fingerprint()
+
+
+# =========================================================== message_delta ==
+def test_message_delta_round_trips_through_apply():
+    pat = _pattern(64, n=60)
+    new = _drift(pat, keep=50, extra=7)
+    removed, added = message_delta(pat, new)
+    assert removed.size <= 10 and added[0].size <= 17
+    arena = DeltaStack.from_phases([pat.bind(LASSEN)])
+    mutated = arena.apply(removed, {0: added}, verify=True)  # bit-identity
+    ph = mutated.phases[0]
+    got = np.sort(np.rec.fromarrays([ph.src, ph.dst, ph.size]))
+    want = np.sort(np.rec.fromarrays([new.src.astype(np.int64),
+                                      new.dst.astype(np.int64),
+                                      np.asarray(new.size, float)]))
+    for f in ("f0", "f1", "f2"):
+        assert np.array_equal(getattr(got, f), getattr(want, f))
+
+
+def test_message_delta_identity_and_duplicates():
+    pat = _pattern(64)
+    removed, added = message_delta(pat, pat)
+    assert removed.size == 0 and added[0].size == 0
+    # duplicate triples match multiset-style: min(a, b) copies survive,
+    # and removals take the LAST occurrences (earliest survivors keep slots)
+    old = CommPattern(src=np.array([1, 1, 1, 2]), dst=np.array([2, 2, 2, 3]),
+                      size=np.array([8.0, 8.0, 8.0, 4.0]), n_procs=8)
+    new = CommPattern(src=np.array([1, 2, 2]), dst=np.array([2, 3, 3]),
+                      size=np.array([8.0, 4.0, 4.0]), n_procs=8)
+    removed, added = message_delta(old, new)
+    assert removed.tolist() == [1, 2]           # last two (1->2) duplicates
+    assert added[0].tolist() == [2] and added[2].tolist() == [4.0]
+
+
+# ========================================================= ArenaCache core ==
+def test_cache_memory_roundtrip_and_lru():
+    c = ArenaCache(max_entries=2)
+    assert c.get("a") is None and c.stats()["misses"] == 1
+    c.put("a", {"x": 1})
+    c.put("b", {"x": 2})
+    c.put("c", {"x": 3})                        # evicts "a" (LRU)
+    assert c.get("a") is None and c.get("b") == {"x": 2}
+    assert c.n_entries == 2
+    c.clear()
+    assert c.n_entries == 0
+    with pytest.raises(ValueError, match="max_entries"):
+        ArenaCache(max_entries=0)
+
+
+def test_cache_disk_persistence_is_atomic(tmp_path):
+    d = str(tmp_path / "cache")
+    c = ArenaCache(d)
+    c.put("key", {"model": {"standard": 1.5}})
+    # no temp droppings; exactly one checksummed entry file
+    assert glob.glob(os.path.join(d, "*.tmp")) == []
+    (fname,) = glob.glob(os.path.join(d, "*.json"))
+    obj = json.loads(open(fname).read())
+    assert obj["version"] == CACHE_VERSION and "checksum" in obj
+    # a fresh cache (cold restart) reloads it
+    assert ArenaCache(d).get("key") == {"model": {"standard": 1.5}}
+
+
+@pytest.mark.parametrize("damage", ["truncate", "garbage", "skew", "tamper"])
+def test_cache_rejects_damaged_entries_and_degrades(tmp_path, damage):
+    d = str(tmp_path / "cache")
+    ArenaCache(d).put("key", {"x": 1})
+    (fname,) = glob.glob(os.path.join(d, "*.json"))
+    text = open(fname).read()
+    if damage == "truncate":
+        open(fname, "w").write(text[: len(text) // 2])  # torn write
+    elif damage == "garbage":
+        open(fname, "w").write("\x00not json\x00")
+    elif damage == "skew":
+        obj = json.loads(text)
+        obj["version"] = CACHE_VERSION + 1
+        open(fname, "w").write(json.dumps(obj))
+    else:                                       # tamper: body != checksum
+        obj = json.loads(text)
+        obj["body"] = {"x": 999}
+        open(fname, "w").write(json.dumps(obj))
+    events_before = get_health().n_events
+    c = ArenaCache(d)
+    assert c.get("key") is None                 # degrade to a miss
+    assert c.stats()["rejected"] == 1
+    assert get_health().n_events == events_before + 1
+    assert get_health().events_for("cache", "serve.cache_read")
+
+
+def test_cache_fault_sites(tmp_path):
+    d = str(tmp_path / "cache")
+    c = ArenaCache(d)
+    with faults.inject("serve.cache_write", "raise") as spec:
+        c.put("k", {"x": 1})
+    assert spec.fired == 1 and c.stats()["write_errors"] == 1
+    assert c.get("k") == {"x": 1}               # memory tier still serves
+    assert ArenaCache(d).get("k") is None       # disk write was skipped
+    c.put("k", {"x": 1})                        # clean write this time
+    with faults.inject("serve.cache_read", "timeout") as spec:
+        assert ArenaCache(d).get("k") is None   # injected I/O timeout
+    assert spec.fired == 1
+    # corrupt-mode poisons the written bytes; the next read's checksum
+    # validation catches it and degrades to a rebuild
+    with faults.inject("serve.cache_write", "corrupt"):
+        c.put("k2", {"x": 2})
+    fresh = ArenaCache(d)
+    assert fresh.get("k2") is None and fresh.stats()["rejected"] == 1
+    assert fresh.get("k") == {"x": 1}           # other entries unharmed
+
+
+def test_cache_snapshot_restore_roundtrip():
+    c = ArenaCache()
+    c.put("a", {"x": 1})
+    c.put("b", {"y": [1.5, 2.5]})
+    snap = c.snapshot()
+    assert snap["version"] == CACHE_VERSION
+    warm = ArenaCache()
+    assert warm.restore(snap) == 2
+    assert warm.get("a") == {"x": 1} and warm.get("b") == {"y": [1.5, 2.5]}
+    # damaged snapshots restore nothing, with a health event — never raise
+    events_before = get_health().n_events
+    bad = dict(snap, version=CACHE_VERSION + 1)
+    assert ArenaCache().restore(bad) == 0
+    assert ArenaCache().restore({"entries": {}}) == 0
+    assert ArenaCache().restore("junk") == 0
+    assert get_health().n_events == events_before + 3
+    # snapshots are JSON-safe end to end
+    assert ArenaCache().restore(json.loads(json.dumps(snap))) == 2
+
+
+# ==================================================== service integration ==
+def test_service_cache_hits_are_bit_identical():
+    pat = _pattern(LASSEN.n_procs)
+    svc = StrategyService(LASSEN, backend="numpy")
+    cold = svc.query(pat)
+    hit = svc.query(pat)
+    assert not cold.cached and hit.cached and hit.ok
+    assert hit.verdict.model == cold.verdict.model
+    assert hit.verdict.sim == cold.verdict.sim
+    assert hit.verdict.model_winner == cold.verdict.model_winner
+    assert hit.verdict.sim_winner == cold.verdict.sim_winner
+
+
+def test_service_cache_keys_include_the_configuration():
+    pat = _pattern(LASSEN.n_procs)
+    shared = ArenaCache()
+    a = StrategyService(LASSEN, backend="numpy", seed=0, cache=shared)
+    b = StrategyService(LASSEN, backend="numpy", seed=1, cache=shared)
+    ra = a.query(pat)
+    rb = b.query(pat)
+    assert not rb.cached                        # different seed, no cross-hit
+    assert a.query(pat).cached and b.query(pat).cached
+    assert ra.ok and rb.ok
+
+
+def test_service_warm_restart_agrees_with_cold(tmp_path):
+    pat = _pattern(LASSEN.n_procs)
+    disk = str(tmp_path / "cache")
+    svc = StrategyService(LASSEN, backend="numpy", cache=ArenaCache(disk))
+    cold = svc.query(pat)
+    # warm path 1: snapshot/restore into a fresh memory-only service
+    warm = StrategyService(LASSEN, backend="numpy")
+    assert warm.restore(svc.snapshot()) >= 1
+    r = warm.query(pat)
+    assert r.cached and r.verdict.plans == {}   # restored: no plans
+    assert r.verdict.model == cold.verdict.model
+    assert r.verdict.sim == cold.verdict.sim
+    # warm path 2: a fresh service over the same disk directory
+    disk_warm = StrategyService(LASSEN, backend="numpy",
+                                cache=ArenaCache(disk))
+    r2 = disk_warm.query(pat)
+    assert r2.cached and r2.verdict.sim == cold.verdict.sim
+
+
+def test_service_survives_cache_corruption(tmp_path):
+    pat = _pattern(LASSEN.n_procs)
+    disk = str(tmp_path / "cache")
+    svc = StrategyService(LASSEN, backend="numpy", cache=ArenaCache(disk))
+    cold = svc.query(pat)
+    for f in glob.glob(os.path.join(disk, "*.json")):
+        open(f, "w").write("corrupted mid-run")
+    fresh = StrategyService(LASSEN, backend="numpy", cache=ArenaCache(disk))
+    rebuilt = fresh.query(pat)                  # rebuild, not an error
+    assert rebuilt.ok and not rebuilt.cached
+    assert rebuilt.verdict.sim == cold.verdict.sim
+    assert get_health().events_for("cache", "serve.cache_read")
+
+
+# ========================================================= drift repricing ==
+def test_reprice_small_drift_is_incremental_and_exact():
+    pat = _pattern(LASSEN.n_procs, n=60)
+    new = _drift(pat, keep=55, extra=4)
+    svc = StrategyService(LASSEN, backend="numpy")
+    res = svc.reprice(pat, new)
+    assert res.ok and not res.degraded
+    # the verdict equals a from-scratch sweep of the canonical mutated
+    # order (survivors in place, additions appended) — bit for bit
+    arena = DeltaStack.from_phases([pat.bind(LASSEN)])
+    removed, added = message_delta(arena.phases[0], new)
+    canonical = arena.apply(removed, {0: added}).phases[0]
+    ref = StrategyService(LASSEN, backend="numpy").query(canonical)
+    assert res.verdict.model == ref.verdict.model
+    assert res.verdict.sim == ref.verdict.sim
+    # and a repeat reprice of the same drift hits the cache
+    again = svc.reprice(pat, new)
+    assert again.cached and again.verdict.sim == res.verdict.sim
+
+
+def test_reprice_chains_across_generations():
+    pat = _pattern(LASSEN.n_procs, n=60)
+    svc = StrategyService(LASSEN, backend="numpy")
+    prev = pat
+    seen = set()
+    for gen in range(3):
+        new = _drift(prev, keep=prev.n_msgs - 4, extra=4, seed=100 + gen)
+        res = svc.reprice(prev, new)
+        assert res.ok, res.error
+        key = (res.verdict.model_winner, res.verdict.sim_winner)
+        seen.add(key)
+        prev = new
+    assert seen                                 # every generation answered
+
+
+def test_reprice_large_drift_falls_back_to_rebuild():
+    pat = _pattern(LASSEN.n_procs, n=60)
+    totally_new = _pattern(LASSEN.n_procs, n=60, seed=123)
+    svc = StrategyService(LASSEN, backend="numpy", drift_threshold=0.25)
+    res = svc.reprice(pat, totally_new)
+    assert res.ok
+    # the rebuild path prices the new order itself, so the verdict equals
+    # a plain query of the new pattern
+    ref = StrategyService(LASSEN, backend="numpy").query(totally_new)
+    assert res.verdict.sim == ref.verdict.sim
+
+
+def test_reprice_rejects_invalid_and_never_raises():
+    pat = _pattern(LASSEN.n_procs)
+    bad = CommPattern(src=np.array([0, LASSEN.n_procs]),
+                      dst=np.array([1, 0]), size=np.array([8.0, 8.0]),
+                      n_procs=LASSEN.n_procs)
+    svc = StrategyService(LASSEN, backend="numpy")
+    res = svc.reprice(pat, bad)
+    assert not res.ok and res.error is not None
+    # an unusable `old` degrades to a full rebuild of `new`
+    res2 = svc.reprice(bad, pat)
+    assert res2.ok

@@ -1,0 +1,222 @@
+"""Concurrency + chaos soak for the production strategy service.
+
+The ISSUE-9 acceptance pins live here (DESIGN.md §13): the full
+``DEFAULT_SCENARIOS`` registry queried from >= 4 threads under every-site
+fault injection (including the ``serve.cache_*`` and ``serve.deadline``
+sites), with the disk cache corrupted mid-run, completes with one
+:class:`repro.serve.ServiceResult` per pattern, verdicts bit-identical to
+a clean serial numpy run, ``degraded`` / ``Overloaded`` / deadline flags
+set where applicable, and no unhandled exception anywhere.  Cold and warm
+(restored-snapshot) runs agree, and the optimizer steering loop
+(:func:`repro.sparse.optimize_partition` -> :meth:`StrategyService.reprice`)
+prices drift without degrading.
+"""
+import glob
+import os
+import threading
+
+import numpy as np
+
+from repro.comm import faults, pattern_fingerprint
+from repro.comm.health import get_health
+from repro.net.machine import lassen_machine
+from repro.serve import (AdmissionQueue, ArenaCache, Deadline,
+                         DeadlineExceeded, StrategyService)
+from repro.sparse import (RowPartition, optimize_partition, poisson_3d,
+                          spmv_comm_pattern)
+from repro.sparse.partition import CommPattern
+from repro.workloads.registry import DEFAULT_SCENARIOS, scenario_patterns
+
+LASSEN = lassen_machine((2, 2, 2))
+
+#: Every registered fault site armed at once — the ambient storm the
+#: chaos CI soak row also runs under.
+STORM = ",".join(f"{site}:raise" for site in faults.SITES)
+
+
+def _registry_patterns():
+    return [p for sc in DEFAULT_SCENARIOS for _, p in scenario_patterns(sc)]
+
+
+def _patterns(P, m=6, n=48):
+    rng = np.random.default_rng(7)
+    return [CommPattern(src=rng.integers(0, P, n), dst=rng.integers(0, P, n),
+                        size=rng.integers(64, 4096, n).astype(float),
+                        n_procs=P)
+            for _ in range(m)]
+
+
+def _verdict_key(v):
+    return (v.model, v.sim, v.model_winner, v.sim_winner)
+
+
+def _run_threads(n, fn, join_timeout=120.0):
+    """Run ``fn(i)`` on ``n`` barrier-synchronised threads; fail the test
+    on ANY escaped exception; return the per-thread results."""
+    errs, out = [], [None] * n
+    barrier = threading.Barrier(n)
+
+    def work(i):
+        try:
+            barrier.wait(timeout=30)
+            out[i] = fn(i)
+        except BaseException as e:  # noqa: BLE001 - the assertion IS "none"
+            errs.append((i, repr(e)))
+
+    threads = [threading.Thread(target=work, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=join_timeout)
+    assert not errs, f"unhandled exceptions escaped worker threads: {errs}"
+    assert not any(t.is_alive() for t in threads), "worker thread hung"
+    return out
+
+
+# ========================================================== threaded storm ==
+def test_threaded_query_many_is_bit_identical_under_storm(monkeypatch):
+    """N threads x M patterns under an every-site fault storm: one result
+    per pattern per call, all verdicts bit-identical to the clean serial
+    numpy reference, and the health ledger stays consistent."""
+    monkeypatch.delenv(faults.ENV_VAR, raising=False)  # clean reference
+    pats = _patterns(LASSEN.n_procs)
+    reference = [
+        _verdict_key(r.verdict)
+        for r in StrategyService(LASSEN, backend="numpy").query_many(pats)]
+
+    monkeypatch.setenv(faults.ENV_VAR, STORM)
+    svc = StrategyService(LASSEN)                # shared; default backend
+    n_threads = 6
+
+    def work(i):
+        return svc.query_many(pats)
+
+    for results in _run_threads(n_threads, work):
+        assert len(results) == len(pats)         # one result per pattern
+        for res, want in zip(results, reference):
+            assert res.ok, res.error
+            assert _verdict_key(res.verdict) == want
+    h = get_health()
+    assert h.n_events == len(h.events) + h.dropped_events
+    assert all(ev.site in faults.SITES or ev.site.startswith("serve.")
+               for ev in h.events)
+
+
+# ========================================================= acceptance soak ==
+def test_registry_soak_under_storm_with_midrun_corruption(tmp_path,
+                                                          monkeypatch):
+    """The headline soak: full DEFAULT_SCENARIOS from 4 no-timeout threads
+    plus an overloaded client and a deadline client, every fault site
+    armed, disk cache corrupted (and memory tier dropped) mid-run."""
+    monkeypatch.delenv(faults.ENV_VAR, raising=False)  # clean warm-up
+    pats = _registry_patterns()
+    reference = [
+        _verdict_key(r.verdict)
+        for r in StrategyService(LASSEN, backend="numpy").query_many(pats)]
+
+    disk = str(tmp_path / "cache")
+    cache = ArenaCache(disk)
+    svc = StrategyService(LASSEN, cache=cache)
+    # a clean warm-up pass lands real entries on disk to corrupt later
+    warm = svc.query_many(pats)
+    assert [r.ok for r in warm] == [True] * len(pats)
+    entry_files = glob.glob(os.path.join(disk, "*.json"))
+    assert entry_files
+
+    monkeypatch.setenv(faults.ENV_VAR, STORM)
+
+    n_threads = 4
+    checkpoint = threading.Barrier(n_threads + 1)   # workers + corrupter
+
+    def work(i):
+        first = svc.query_many(pats)
+        checkpoint.wait(timeout=30)                  # cache dies here
+        checkpoint.wait(timeout=30)
+        second = svc.query_many(pats)
+        return first + second
+
+    def corrupt_mid_run():
+        checkpoint.wait(timeout=30)
+        for fname in entry_files:
+            with open(fname, "w") as f:
+                f.write("\x00torn mid-soak\x00")
+        cache.clear()                                # force disk re-reads
+        checkpoint.wait(timeout=30)
+
+    corrupter = threading.Thread(target=corrupt_mid_run)
+    corrupter.start()
+    per_thread = _run_threads(n_threads, work)
+    corrupter.join(timeout=30)
+    assert not corrupter.is_alive()
+
+    for results in per_thread:
+        assert len(results) == 2 * len(pats)
+        for res, want in zip(results, reference + reference):
+            assert res.ok, res.error
+            # degraded flags are fine (expected, even) under the storm —
+            # the numbers still must not move
+            assert _verdict_key(res.verdict) == want
+    h = get_health()
+    assert h.n_events == len(h.events) + h.dropped_events
+
+    # -- the overloaded client: a held queue sheds its whole batch --------
+    q = AdmissionQueue(capacity=8, policy="reject")
+    busy = StrategyService(LASSEN, backend="numpy", admission=q)
+    q.acquire(8, Deadline(None))                     # queue already full
+    try:
+        shed = busy.query_many(pats)
+    finally:
+        q.release(8)
+    assert len(shed) == len(pats)
+    assert all((not r.ok) and r.overloaded for r in shed)
+    assert q.n_shed > 0
+    recovered = busy.query_many(pats)                # drains once released
+    assert all(r.ok for r in recovered)
+
+    # -- the deadline client: storm's serve.deadline site + timeout=0 -----
+    hasty = StrategyService(LASSEN, backend="numpy", timeout=0.0)
+    late = hasty.query_many(pats)
+    assert len(late) == len(pats)
+    assert all(not r.ok for r in late)
+    assert all(isinstance(r.error, DeadlineExceeded) for r in late)
+
+
+def test_cold_and_warm_registry_runs_agree():
+    """A restored-snapshot (warm) service answers the whole registry from
+    cache, bit-identical to the cold run that produced the snapshot."""
+    pats = _registry_patterns()
+    cold_svc = StrategyService(LASSEN, backend="numpy")
+    cold = cold_svc.query_many(pats)
+    assert all(r.ok and not r.cached for r in cold)
+
+    # identical-content patterns share one fingerprint (llama3-tp's two
+    # collectives), so the snapshot holds one entry per distinct shape
+    distinct = len({pattern_fingerprint(p) for p in pats})
+    warm_svc = StrategyService(LASSEN, backend="numpy")
+    assert warm_svc.restore(cold_svc.snapshot()) == distinct
+    warm = warm_svc.query_many(pats)
+    for c, w in zip(cold, warm):
+        assert w.ok and w.cached
+        assert _verdict_key(w.verdict) == _verdict_key(c.verdict)
+
+
+# ======================================================= optimizer steering ==
+def test_optimizer_steering_reprices_without_degrading():
+    """The drift loop the service exists for: optimize a partition with
+    per-move strategy verdicts, then reprice initial -> optimized through
+    the service — incremental, ok, and never degraded."""
+    A = poisson_3d(6)
+    P = 16
+    res = optimize_partition(A, LASSEN, n_procs=P, moves=32, seed=0,
+                             rerun_strategies=True)
+    assert res.cost <= res.initial_cost
+    assert res.verdicts                              # rerun_strategies ran
+    initial = spmv_comm_pattern(A, RowPartition.balanced(A.n_rows, P))
+    svc = StrategyService(LASSEN, backend="numpy")
+    out = svc.reprice(initial, res.pattern)
+    assert out.ok, out.error
+    assert not out.degraded
+    # repricing the same drift again is a cache hit with the same verdict
+    again = svc.reprice(initial, res.pattern)
+    assert again.cached
+    assert _verdict_key(again.verdict) == _verdict_key(out.verdict)
