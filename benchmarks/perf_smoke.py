@@ -37,7 +37,21 @@ regression still trips it:
   (the registry's ONE cross-machine ``best_strategy_many`` arena vs the
   per-pattern ``best_strategy`` loop on the same bound phases, verdicts
   asserted identical inside the bench) — the stacked all-scenario sweep
-  must never lose to the per-scenario loop it replaced (>= 1.0x).
+  must never lose to the per-scenario loop it replaced (>= 1.0x);
+* the ``exec_agreement_crossover`` row of :mod:`benchmarks.bench_exec`
+  (numpy-only) — the *calibrated* model (fitted from recorded sweeps,
+  never shown ground truth) must call every direct-vs-aggregated
+  crossover case on the Lassen-like sweep: the small end where
+  ``device_direct`` wins, the large end where ``host_staged`` wins, and
+  the flip itself (>= 1.0, i.e. exact);
+* the ``exec_standard_vs_naive`` row of the same bench — the greedy
+  edge-colored lowering of the ``standard`` schedule vs the naive
+  one-``ppermute``-per-message lowering of the same exchange on the
+  forced 8-device host mesh, delivered payloads asserted identical inside
+  the bench — fusing messages into permutation rounds must never lose to
+  the per-message loop (>= 1.0x).  Like ``stack_jax_vs_onehot`` the row
+  only exists where jax is importable, so it is optional in a CSV from a
+  jax-less host.
 
 Usage::
 
@@ -59,9 +73,14 @@ AUTO_ROWS = ("stack_auto_small", "stack_auto_large")
 JAX_ROWS = ("stack_jax_vs_onehot",)
 #: registry cross-machine arena vs per-scenario loop (numpy-only)
 LLM_ROWS = ("llm_sweep_stacked",)
+#: calibrated-model crossover agreement (numpy-only, always present)
+EXEC_ROWS = ("exec_agreement_crossover",)
+#: colored-vs-naive lowered schedule: present only where jax imports
+EXEC_JAX_ROWS = ("exec_standard_vs_naive",)
 
-GATED_ROWS = STACK_ROWS + DELTA_ROWS + AUTO_ROWS + JAX_ROWS + LLM_ROWS
-OPTIONAL_ROWS = frozenset(JAX_ROWS)
+GATED_ROWS = (STACK_ROWS + DELTA_ROWS + AUTO_ROWS + JAX_ROWS + LLM_ROWS
+              + EXEC_ROWS + EXEC_JAX_ROWS)
+OPTIONAL_ROWS = frozenset(JAX_ROWS + EXEC_JAX_ROWS)
 
 #: per-row minimum ``derived`` speedup (see the module docstring)
 THRESHOLD = {name: 1.0 for name in GATED_ROWS}
@@ -73,7 +92,9 @@ _REF = {**{n: ("loop", "us/sweep") for n in STACK_ROWS},
         **{n: ("rebuild", "us/search") for n in DELTA_ROWS},
         **{n: ("numpy", "us/eval") for n in AUTO_ROWS},
         **{n: ("one-hot", "us/reduce") for n in JAX_ROWS},
-        **{n: ("loop", "us/sweep") for n in LLM_ROWS}}
+        **{n: ("loop", "us/sweep") for n in LLM_ROWS},
+        **{n: ("simulator", "us/sweep") for n in EXEC_ROWS},
+        **{n: ("naive", "us/run") for n in EXEC_JAX_ROWS}}
 _REF["delta_service_qps"] = ("rebuild", "us/query")
 
 
@@ -96,13 +117,16 @@ def main() -> None:
         rows = _rows_from_csv(sys.argv[1])
     else:
         from .bench_delta import bench_delta_local_search, bench_service_qps
+        from .bench_exec import bench_exec_agreement, bench_exec_schedules
         from .bench_kernels import bench_phase_stack
         from .bench_llm_workloads import bench_llm_workloads
         from .bench_stack_backends import bench_stack_backends
         rows = (bench_phase_stack() + bench_delta_local_search()
                 + bench_service_qps()
                 + [r for r in bench_stack_backends() if r[0] in GATED_ROWS]
-                + [r for r in bench_llm_workloads() if r[0] in GATED_ROWS])
+                + [r for r in bench_llm_workloads() if r[0] in GATED_ROWS]
+                + [r for r in bench_exec_agreement() if r[0] in GATED_ROWS]
+                + [r for r in bench_exec_schedules() if r[0] in GATED_ROWS])
     failed = False
     for name, us, speedup in rows:
         ref, unit = _REF[name]

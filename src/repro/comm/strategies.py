@@ -86,6 +86,11 @@ GPU_STRATEGIES = ("host_staged", "device_direct")
 #: self-copies at the ``h2d`` rate class) of the ``host_staged`` strategy.
 ROLES = ("standard", "local", "d2h", "gather", "inter", "scatter", "h2d")
 
+#: Row dtype of :meth:`StrategyPlan.schedule`: one row per rewritten message.
+SCHEDULE_DTYPE = np.dtype([("phase", np.int32), ("role", np.int32),
+                           ("src", np.int64), ("dst", np.int64),
+                           ("size", np.float64)])
+
 
 def strategies_for(machine) -> tuple[str, ...]:
     """The strategy names worth sweeping on ``machine``: the three node-aware
@@ -142,6 +147,26 @@ class StrategyPlan:
             if r == role:
                 return ph
         return None
+
+    def schedule(self) -> np.ndarray:
+        """The plan's executable message schedule, one structured row per
+        rewritten message (dtype ``SCHEDULE_DTYPE``): ``phase`` indexes into
+        ``phases``, ``role`` into ``ROLES``, and ``src`` / ``dst`` / ``size``
+        are the message endpoints and payload bytes.  This is the contract
+        the execution layer (:mod:`repro.exec`) lowers from — a lowered
+        schedule's per-role (src, dst) pair set must be a subset of these
+        rows (see ``repro.exec.plan.pairs_subset_of_plan``)."""
+        out = np.empty(self.total_msgs, dtype=SCHEDULE_DTYPE)
+        at = 0
+        for i, (ph, role) in enumerate(zip(self.phases, self.roles)):
+            rows = out[at:at + ph.n_msgs]
+            rows["phase"] = i
+            rows["role"] = ROLES.index(role)
+            rows["src"] = ph.src
+            rows["dst"] = ph.dst
+            rows["size"] = ph.size
+            at += ph.n_msgs
+        return out
 
     def inter_node_pair_bytes(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """(send_node, recv_node, bytes) actually crossing node boundaries.

@@ -77,6 +77,34 @@ def fit_RN(ks, times, size: float, alpha: float, Rb: float) -> float:
     return float(RN)
 
 
+def fit_RN_rails(ks, times, size: float, alpha: float, Rb: float,
+                 rails: int = 1, rel_margin: float = 0.05) -> float:
+    """Multi-rail-exact R_N recovery from a ppn sweep.
+
+    :func:`fit_RN` regresses a straight line through the saturated sweep,
+    which is exact only for single-rail machines — with ``rails`` > 1 the
+    saturated curve is the *staircase* ``T(k) = alpha + x*size/R_N`` with
+    ``x = ceil(k / rails)``, whose secant slope is not ``size/R_N``.  Given
+    the rail count (recover it first with :func:`fit_rails`), invert the
+    staircase point-wise instead: every saturated point yields
+    ``R_N = x*size / (T(k) - alpha)`` exactly; return the median over the
+    points whose time ``times`` exceeds the unsaturated plateau
+    ``alpha + size/Rb`` by more than ``rel_margin`` (relative).  Pass the
+    *fitted* ``alpha`` (which absorbs the simulator's per-message queue
+    step) and ``Rb`` for the sweep's ``size`` protocol class, and the
+    sweeps' ``ks`` process counts — the queue offset then cancels out of
+    the subtraction.  Returns ``inf`` when no point saturates (the cap
+    never binds within the sweep, matching an uncapped rate table)."""
+    ks = np.asarray(ks, dtype=np.float64)
+    times = np.asarray(times, dtype=np.float64)
+    x = np.ceil(ks / float(rails))
+    flat = alpha + size / Rb
+    sat = times > flat * (1.0 + rel_margin)
+    if not sat.any():
+        return float("inf")
+    return float(np.median(x[sat] * size / (times[sat] - alpha)))
+
+
 def fit_rails(ks, times, rel_tol: float = 1e-9) -> int:
     """Recover the per-node NIC (rail) count from a ppn saturation sweep.
 

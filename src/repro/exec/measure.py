@@ -1,0 +1,126 @@
+"""Timed schedule runs and measured-vs-predicted strategy orderings.
+
+:func:`time_schedule` runs a lowered schedule on the forced multi-device
+host mesh with warmup iterations followed by ``reps`` timed runs, reporting
+the **median** (warmup + median-of-k: compilation lands in warmup, the
+median rejects scheduler outliers).  :func:`measure_strategies` sweeps
+every strategy of a phase through lower + time; :func:`predicted_costs`
+prices the same strategies' pricing plans through the model ladder —
+optionally with a *fitted* parameter table from
+:mod:`repro.exec.calibrate` — and :func:`ordering` /
+:func:`pairwise_agreement` turn both cost dicts into comparable rankings.
+
+Only the timing functions touch jax (lazily); the prediction/agreement
+half is numpy-only so the docs and benches can rank strategies without a
+device runtime.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.comm.phase import CommPhase
+from repro.comm.strategies import rewrite, strategies_for
+
+from .plan import UNIT_BYTES, ExecSchedule, build_schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class Measurement:
+    """One timed schedule: ``median_s`` over ``times_s`` (the individual
+    timed runs, post-warmup), plus the schedule's round count ``n_rounds``
+    for overhead normalization."""
+
+    median_s: float
+    times_s: tuple
+    n_rounds: int
+
+
+def time_schedule(schedule: ExecSchedule, *, mesh=None, reps: int = 5,
+                  warmup: int = 2) -> Measurement:
+    """Time ``schedule`` on the JAX path: ``warmup`` untimed runs (the
+    first compiles), then ``reps`` timed runs, median reported.  ``mesh``
+    as in :func:`repro.exec.lower.build_executor`."""
+    from .lower import build_executor
+    run = build_executor(schedule, mesh=mesh)
+    for _ in range(max(1, warmup)):
+        run()
+    times = []
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        run()
+        times.append(time.perf_counter() - t0)
+    return Measurement(median_s=float(np.median(times)),
+                       times_s=tuple(times), n_rounds=schedule.n_rounds)
+
+
+def launch_overhead(phase: CommPhase, *, mesh=None, reps: int = 5,
+                    warmup: int = 2) -> float:
+    """The fixed cost of launching a lowered schedule, in seconds: the
+    median time of the ``standard`` schedule of an *empty* exchange bound
+    to ``phase``'s machine (same rank count, zero messages — all launch,
+    no transport).  ``mesh`` / ``reps`` / ``warmup`` as in
+    :func:`time_schedule`."""
+    empty = CommPhase.build(phase.machine, [], [], [],
+                            n_procs=phase.n_procs)
+    sched = build_schedule(empty, "standard")
+    return time_schedule(sched, mesh=mesh, reps=reps, warmup=warmup).median_s
+
+
+def measure_strategies(phase: CommPhase, strategies=None, *,
+                       unit_bytes: float = UNIT_BYTES,
+                       coloring: str = "greedy", mesh=None, reps: int = 5,
+                       warmup: int = 2) -> dict:
+    """Lower and time every strategy of ``phase``: returns ``{strategy:
+    (ExecSchedule, Measurement)}``.  ``strategies`` defaults to
+    :func:`repro.comm.strategies.strategies_for` the phase's machine;
+    ``unit_bytes`` / ``coloring`` feed the planner and ``mesh`` / ``reps``
+    / ``warmup`` feed :func:`time_schedule`."""
+    names = (strategies if strategies is not None
+             else strategies_for(phase.machine))
+    out = {}
+    for name in names:
+        sched = build_schedule(phase, name, unit_bytes=unit_bytes,
+                               coloring=coloring)
+        out[name] = (sched, time_schedule(sched, mesh=mesh, reps=reps,
+                                          warmup=warmup))
+    return out
+
+
+def predicted_costs(phase: CommPhase, strategies=None, *,
+                    level: str = "contention", params=None) -> dict:
+    """Model-ladder cost per strategy of ``phase`` at ladder ``level``:
+    ``{strategy: predicted_seconds}``.  ``params`` substitutes a fitted
+    table (:func:`repro.exec.calibrate.calibrate`) for the machine's ground
+    truth — the calibrated-model side of the measured-vs-predicted
+    comparison; ``strategies`` as in :func:`measure_strategies`."""
+    from repro.core.models import sequence_cost
+    names = (strategies if strategies is not None
+             else strategies_for(phase.machine))
+    return {name: float(sequence_cost(rewrite(phase, name).phases,
+                                      level=level, params=params).total)
+            for name in names}
+
+
+def ordering(costs: dict) -> tuple:
+    """Strategy names of the ``costs`` dict, cheapest first (ties broken by
+    name for determinism)."""
+    return tuple(sorted(costs, key=lambda k: (costs[k], k)))
+
+
+def pairwise_agreement(a: dict, b: dict) -> float:
+    """Fraction of strategy pairs ranked in the same order by cost dicts
+    ``a`` and ``b`` (1.0 = identical orderings; keys must match).  This is
+    the ordering-agreement statistic ``bench_exec`` reports."""
+    if set(a) != set(b):
+        raise ValueError(f"orderings cover different strategies: "
+                         f"{sorted(a)} vs {sorted(b)}")
+    names = sorted(a)
+    same = total = 0
+    for i, x in enumerate(names):
+        for y in names[i + 1:]:
+            total += 1
+            same += (a[x] < a[y]) == (b[x] < b[y])
+    return 1.0 if total == 0 else same / total

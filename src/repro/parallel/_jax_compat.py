@@ -19,6 +19,15 @@ def pcast(x, axis_names, to: str = "varying"):
     return x
 
 
+def ppermute(x, axis_name, perm):
+    """``jax.lax.ppermute`` of ``x`` along ``axis_name`` with the static
+    source->destination pair list ``perm``.  Thin passthrough so collective
+    call sites (the :mod:`repro.exec` schedule executor) import collectives
+    from one place, like :func:`shard_map`; an empty ``perm`` is the
+    fill-with-zeros permutation jax defines (no pair sends to anyone)."""
+    return jax.lax.ppermute(x, axis_name, perm)
+
+
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
     new = getattr(jax, "shard_map", None)
     if new is not None:

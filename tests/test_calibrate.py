@@ -1,0 +1,109 @@
+"""Round-trip goldens for the calibration layer: fitting the recorded
+(noiseless) sweep suite of a preset must recover the preset — the fitted
+table re-predicts every recorded measurement within float tolerance and
+the rail count exactly.
+
+The one systematic offset is documented in :mod:`repro.exec.calibrate`:
+the simulator charges one queue step per received message, so fitted
+alphas absorb gamma (``alpha_fit == alpha_true + gamma``); rates and the
+injection cap round-trip exactly.
+"""
+import numpy as np
+import pytest
+from pytest import approx
+
+from repro.core.fitting import fit_RN_rails
+from repro.core.params import REND
+from repro.exec import SweepRecord, calibrate, record_sweeps
+from repro.net.machine import (blue_waters_machine, frontier_machine,
+                               lassen_machine)
+
+PRESETS = {
+    "lassen": lambda: lassen_machine((2, 2, 2)),
+    "frontier": lambda: frontier_machine((2, 2, 2)),
+    "blue_waters": lambda: blue_waters_machine((2, 1, 1)),
+}
+
+
+@pytest.fixture(scope="module", params=sorted(PRESETS))
+def calibrated(request):
+    machine = PRESETS[request.param]()
+    record = record_sweeps(machine)
+    return machine, record, calibrate(record, machine.params)
+
+
+def test_rails_recovered_exactly(calibrated):
+    machine, _, result = calibrated
+    assert result.n_rails == machine.params.n_rails
+    for kind, rails in result.rails_by_class.items():
+        assert rails == machine.params.n_rails, kind
+
+
+def test_fitted_alpha_absorbs_gamma_rates_exact(calibrated):
+    machine, record, result = calibrated
+    true, fit = machine.params, result.params
+    for kind in record.pingpong:
+        li = true.class_index(kind)
+        for s in record.sizes:
+            pi = int(true.protocol_of(np.asarray([s]))[0])
+            assert fit.alpha[li, pi] == approx(true.alpha[li, pi]
+                                               + true.gamma, rel=1e-6)
+            assert fit.Rb[li, pi] == approx(true.Rb[li, pi], rel=1e-6)
+
+
+def test_fitted_table_repredicts_pingpong_sweeps(calibrated):
+    _, record, result = calibrated
+    p = result.params
+    for kind, times in record.pingpong.items():
+        li = p.class_index(kind)
+        for s, t in zip(record.sizes, times):
+            pi = int(p.protocol_of(np.asarray([s]))[0])
+            assert p.alpha[li, pi] + s / p.Rb[li, pi] == approx(t, rel=1e-6)
+
+
+def test_fitted_table_repredicts_ppn_saturation_sweeps(calibrated):
+    machine, record, result = calibrated
+    p = result.params
+    for kind, (ks, ts) in record.ppn.items():
+        li = p.class_index(kind)
+        pi = int(p.protocol_of(np.asarray([record.ppn_size]))[0])
+        x = np.ceil(ks / result.n_rails)
+        pred = (p.alpha[li, pi]
+                + x * record.ppn_size / np.minimum(p.RN[li, pi],
+                                                   x * p.Rb[li, pi]))
+        np.testing.assert_allclose(pred, ts, rtol=1e-6)
+        # and the cap itself round-trips to the ground truth
+        assert p.RN[li, REND] == approx(machine.params.RN[li, REND],
+                                        rel=1e-6)
+
+
+def test_record_json_round_trip(calibrated):
+    machine, record, result = calibrated
+    back = SweepRecord.from_json(record.to_json())
+    assert back.machine == record.machine
+    np.testing.assert_array_equal(back.sizes, record.sizes)
+    assert set(back.pingpong) == set(record.pingpong)
+    for kind in record.pingpong:
+        np.testing.assert_array_equal(back.pingpong[kind],
+                                      record.pingpong[kind])
+    for kind in record.ppn:
+        np.testing.assert_array_equal(back.ppn[kind][1], record.ppn[kind][1])
+    # calibrating the deserialized record gives the identical table
+    again = calibrate(back, machine.params)
+    np.testing.assert_array_equal(again.params.alpha, result.params.alpha)
+    np.testing.assert_array_equal(again.params.RN, result.params.RN)
+    assert again.n_rails == result.n_rails
+
+
+def test_fit_RN_rails_handles_unsaturated_and_multirail():
+    # never-saturating sweep -> inf (cap not observable)
+    ks = np.arange(1, 9, dtype=float)
+    flat = 1e-6 + np.zeros(8)
+    assert fit_RN_rails(ks, flat + 1.0 / 1e10, 1.0, 1e-6, 1e10,
+                        rails=2) == float("inf")
+    # exact staircase, r=2: the legacy straight-line fit would be biased
+    size, alpha, Rb, RN, r = float(1 << 20), 1e-6, 1e10, 5e9, 2
+    x = np.ceil(ks / r)
+    times = alpha + x * size / np.minimum(RN, x * Rb)
+    assert fit_RN_rails(ks, times, size, alpha, Rb, rails=r) == approx(
+        RN, rel=1e-12)

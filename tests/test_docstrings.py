@@ -28,6 +28,12 @@ import repro.comm.phase
 import repro.comm.primitives
 import repro.comm.stack
 import repro.comm.strategies
+import repro.exec.calibrate
+import repro.exec.lower
+import repro.exec.measure
+import repro.exec.plan
+import repro.exec.presets
+import repro.exec.reference
 import repro.net.machine
 import repro.serve.admission
 import repro.serve.cache
@@ -42,7 +48,9 @@ MODULES = [repro.comm.phase, repro.comm.primitives, repro.comm.stack,
            repro.workloads.moe, repro.workloads.tp, repro.workloads.pipe,
            repro.workloads.registry, repro.comm.guard, repro.comm.faults,
            repro.comm.health, repro.serve.strategy,
-           repro.serve.admission, repro.serve.cache]
+           repro.serve.admission, repro.serve.cache,
+           repro.exec.plan, repro.exec.reference, repro.exec.lower,
+           repro.exec.measure, repro.exec.calibrate, repro.exec.presets]
 
 #: Parameter names that need no mention: conventions, not API.
 IGNORED_PARAMS = {"self", "cls", "args", "kwargs", "kw"}

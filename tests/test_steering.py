@@ -1,0 +1,66 @@
+"""Hetero partition steering, judged end-to-end (carried-forward ROADMAP
+satellite): ``optimize_partition`` with ``rerun_strategies=True`` on a
+heterogeneous machine re-judges every accepted move with the full strategy
+sweep, and the simulator's verdict over that accepted-move sequence never
+degrades — the model-guided moves are vindicated by the ground-truth
+judge, not just by the model that proposed them.
+
+The configuration (skewed initial partition, step=32, seed=0) is a pinned
+golden: it accepts several moves on the Lassen-like preset, so the
+monotonicity claim is exercised on real re-judgments rather than a
+trivially empty verdict list.
+"""
+import numpy as np
+import pytest
+
+from repro.comm.strategies import best_strategy, strategies_for
+from repro.net.machine import lassen_machine
+from repro.sparse import poisson_3d
+from repro.sparse.optimize import optimize_partition
+from repro.sparse.partition import RowPartition, spmv_comm_pattern
+
+REL_TOL = 1e-9
+
+
+@pytest.fixture(scope="module")
+def steered():
+    machine = lassen_machine((2, 2, 2))
+    A = poisson_3d(10)
+    P = 16
+    weights = np.linspace(3.0, 1.0, P)
+    weights /= weights.sum()
+    starts = np.concatenate(
+        [[0], np.cumsum(np.round(weights * A.n_rows))]).astype(np.int64)
+    starts[-1] = A.n_rows
+    part = RowPartition(starts)
+    result = optimize_partition(A, machine, part=part, moves=128, step=32,
+                                seed=0, rerun_strategies=True)
+    return machine, A, part, result
+
+
+def test_accepted_moves_are_rejudged_by_the_full_hetero_sweep(steered):
+    machine, _, _, result = steered
+    assert result.n_accepted >= 2           # the pin is not vacuous
+    assert len(result.verdicts) == result.n_accepted
+    want = set(strategies_for(machine))
+    assert "host_staged" in want and "device_direct" in want
+    for _, verdict in result.verdicts:
+        assert set(verdict.sim) == want     # judged by the hetero sweep
+        assert set(verdict.model) == want
+
+
+def test_rejudging_never_degrades_the_simulator_verdict(steered):
+    _, _, _, result = steered
+    best_sim = [min(v.sim.values()) for _, v in result.verdicts]
+    for earlier, later in zip(best_sim, best_sim[1:]):
+        assert later <= earlier * (1.0 + REL_TOL)
+
+
+def test_final_partition_beats_initial_under_the_simulator(steered):
+    machine, A, part, result = steered
+    initial = best_strategy(spmv_comm_pattern(A, part).bind(machine), seed=0)
+    final = best_strategy(result.pattern.bind(machine), seed=0)
+    assert (min(final.sim.values())
+            <= min(initial.sim.values()) * (1.0 + REL_TOL))
+    # and the model's accepted-move trace really did lower the model cost
+    assert result.cost <= result.initial_cost
